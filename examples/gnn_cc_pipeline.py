@@ -1,0 +1,61 @@
+"""DPC inside a GNN data pipeline (paper technique x assigned archs):
+
+1. build a large synthetic graph, sample minibatches with the CSR fanout
+   sampler (the minibatch_lg cell's pipeline);
+2. label every sampled subgraph's connected components with DPC-CC
+   (core.connected_components_graph) — the pipeline sanity metric;
+3. train a GAT for a few steps on the samples.
+
+  PYTHONPATH=src python examples/gnn_cc_pipeline.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data import graphs
+from repro.models import gnn
+from repro.optim import adamw
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, deg = 20_000, 12
+    indptr, indices = graphs.random_csr(n, deg, seed=1)
+    feats = rng.standard_normal((n, 32)).astype(np.float32)
+    labels = rng.integers(0, 7, n)
+    sampler = graphs.NeighborSampler(indptr, indices, fanouts=(5, 3), seed=2)
+
+    cfg = gnn.GATConfig(d_in=32, n_classes=7, d_hidden=8, n_heads=4)
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw(3e-3)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        (loss, aux), grads = jax.value_and_grad(gnn.loss_fn, has_aux=True)(
+            params, batch, cfg)
+        params, state, _ = opt.update(grads, state, params)
+        return params, state, loss, aux["acc"]
+
+    for i in range(10):
+        b = graphs.sampled_batch(sampler, feats, labels, batch_nodes=128,
+                                 step=i)
+        # DPC-CC pipeline check: how fragmented is this sample?
+        cc = graphs.component_labels(b)
+        n_comp = len(np.unique(cc[cc >= 0]))
+        gb = {k: (jnp.asarray(v) if isinstance(v, np.ndarray) else v)
+              for k, v in b.items()}
+        params, state, loss, acc = step(params, state, gb)
+        print(f"step {i}: sampled {int(b['node_mask'].sum())} nodes in "
+              f"{n_comp} DPC components | loss {float(loss):.4f} "
+              f"acc {float(acc):.3f}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

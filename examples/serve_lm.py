@@ -1,0 +1,17 @@
+"""Serve a small model with batched requests: prefill + KV-cache decode.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    tps = serve_main(["--arch", "llama3.2-1b", "--smoke", "--batch", "4",
+                      "--prompt-len", "32", "--gen", "16"])
+    assert tps > 0
+    print("OK")

@@ -1,0 +1,27 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+DPC grid workload).  Each module exposes FAMILY, full_config(),
+smoke_config() and SHAPES."""
+from importlib import import_module
+
+ARCH_IDS = [
+    # LM family (5)
+    "stablelm_12b", "llama3_2_1b", "minitron_8b", "deepseek_moe_16b",
+    "kimi_k2_1t",
+    # GNN (4)
+    "gat_cora", "schnet", "meshgraphnet", "dimenet",
+    # RecSys (1)
+    "bst",
+    # the paper's own workload
+    "dpc_grid",
+]
+
+_ALIAS = {i.replace("_", "-"): i for i in ARCH_IDS}
+_ALIAS.update({"llama3.2-1b": "llama3_2_1b", "kimi-k2-1t-a32b": "kimi_k2_1t",
+               "stablelm-12b": "stablelm_12b", "minitron-8b": "minitron_8b",
+               "deepseek-moe-16b": "deepseek_moe_16b",
+               "gat-cora": "gat_cora"})
+
+
+def get(arch_id: str):
+    name = _ALIAS.get(arch_id, arch_id)
+    return import_module(f"repro.configs.{name}")

@@ -1,0 +1,44 @@
+"""dpc-grid — the paper's own workload: Morse-Smale segmentation and
+connected components of Perlin-noise structured grids (paper §5).
+
+Shapes mirror the paper's strong-scaling study; 1024^3 is the largest grid
+whose flat ids fit int32 (2048^3+ takes the int64 path, as the paper's
+32/64-bit id discussion prescribes)."""
+import dataclasses
+
+FAMILY = "dpc"
+
+
+@dataclasses.dataclass(frozen=True)
+class DPCConfig:
+    name: str = "dpc-grid"
+    connectivity: int = 6
+    threshold_quantile: float = 0.9   # paper's "top 10%" feature mask
+    arch: str = "dpc"
+    # §Perf: the CC boundary mask equals (labels >= 0); gather_mask=False
+    # drops the redundant mask all_gather from the ONE exchange
+    gather_mask: bool = True
+
+
+SHAPES = {
+    "grid_512": {"kind": "dpc", "dims": (512, 512, 512)},
+    "grid_1024": {"kind": "dpc", "dims": (1024, 1024, 1024)},
+    "cc_1024": {"kind": "dpc_cc", "dims": (1024, 1024, 1024)},
+    "cc_512": {"kind": "dpc_cc", "dims": (512, 512, 512)},
+}
+
+# smoke grids keep X divisible by the 512-way flat mesh
+SMOKE_SHAPES = {
+    "grid_512": {"kind": "dpc", "dims": (512, 8, 8)},
+    "grid_1024": {"kind": "dpc", "dims": (1024, 8, 8)},
+    "cc_1024": {"kind": "dpc_cc", "dims": (1024, 8, 8)},
+    "cc_512": {"kind": "dpc_cc", "dims": (512, 8, 8)},
+}
+
+
+def full_config() -> DPCConfig:
+    return DPCConfig()
+
+
+def smoke_config() -> DPCConfig:
+    return DPCConfig(name="dpc-grid-smoke")

@@ -1,0 +1,30 @@
+"""Core library: Distributed Path Compression (Will et al., CS.DC 2024)."""
+from .ids import compute_order, inverse_permutation, flat_ids, compact_labels
+from .pathcompress import (path_compress, path_compress_unrolled, jump,
+                           is_converged)
+from .steepest import (grid_steepest, grid_mask_argmax, graph_steepest,
+                       graph_mask_argmax, neighbor_offsets, shift_fill)
+from .ms_segmentation import (ms_segmentation, ms_segmentation_graph,
+                              descending_manifold, ascending_manifold,
+                              extrema, MSSegmentation)
+from .connected_components import (connected_components_grid,
+                                   connected_components_graph,
+                                   component_sizes, CCResult)
+from .baseline_cc import label_propagation_grid, extract_masked_edges
+from .distributed import (distributed_manifold,
+                          distributed_connected_components,
+                          make_dpc_mesh, DPCStats, AXIS)
+
+__all__ = [
+    "compute_order", "inverse_permutation", "flat_ids", "compact_labels",
+    "path_compress", "path_compress_unrolled", "jump", "is_converged",
+    "grid_steepest", "grid_mask_argmax", "graph_steepest", "graph_mask_argmax",
+    "neighbor_offsets", "shift_fill",
+    "ms_segmentation", "ms_segmentation_graph", "descending_manifold",
+    "ascending_manifold", "extrema", "MSSegmentation",
+    "connected_components_grid", "connected_components_graph",
+    "component_sizes", "CCResult",
+    "label_propagation_grid", "extract_masked_edges",
+    "distributed_manifold", "distributed_connected_components",
+    "make_dpc_mesh", "DPCStats", "AXIS",
+]

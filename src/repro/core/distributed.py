@@ -1,0 +1,402 @@
+"""Distributed Path Compression (paper Alg. 1 + Alg. 2) under shard_map.
+
+Decomposition: 1-D slabs along grid axis 0 over a mesh axis (default
+"shards"), one ghost plane per face — the paper's "one layer of ghost
+vertices".  All pointers are *global* flat ids throughout; global<->local
+index conversion is pure integer arithmetic for slab decomposition (replacing
+TTK's triangulation id-translation structures).
+
+Phases (MS manifolds):
+  1. halo exchange of the order field (lax.ppermute, one plane per face);
+  2. steepest init on the extended block; ghost-plane vertices pretend to be
+     maxima (point to themselves) — Alg. 1 lines 6-8;
+  3. local path compression to the block fixpoint (no collectives);
+  4. ONE global communication step: all_gather of the two owned boundary
+     planes' compressed pointers — the SPMD equivalent of Alg. 2's
+     Gather->rank0->Scatter->Allgather staging (deviation (b) in DESIGN.md);
+  5. pointer doubling on the gathered (P, 2, R) ghost table — every device
+     compresses the same table, resolving segments that stretch across
+     multiple ranks (paper Fig. 2);
+  6. final substitution: owned pointers that target any boundary vertex are
+     replaced by the table's compressed target — Alg. 2 lines 27-33.
+
+Connected components add the stitch pass locally (Alg. 3) and, on the
+gathered table, a hook+propagate fixpoint over cut edges and equal-label
+groups.  The paper compresses the ghost table with path compression only;
+that is sufficient for MS integral lines (strictly order-increasing chains)
+but not for CC labels that must *merge* across a cut whose local roots are
+interior vertices — deviation (d2) in DESIGN.md.  The fix stays within the
+paper's single-communication-phase budget: it only post-processes the
+already-gathered table.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .steepest import grid_steepest, grid_mask_argmax, neighbor_offsets
+from .pathcompress import path_compress
+
+AXIS = "shards"
+
+
+class DPCStats(NamedTuple):
+    local_iters: jax.Array      # pointer-doubling rounds in the local phase
+    table_iters: jax.Array      # rounds on the gathered ghost table
+    stitch_rounds: jax.Array    # CC only (0 for MS)
+    ghost_bytes: jax.Array      # bytes all-gathered (the ONE comm phase)
+    masked_ghost_fraction: jax.Array  # CC: fraction of boundary actually masked
+
+
+def make_dpc_mesh(n_shards: int, devices=None) -> Mesh:
+    return jax.make_mesh((n_shards,), (AXIS,), devices=devices)
+
+
+# --- shared helpers ---------------------------------------------------------
+
+
+def _halo(plane_from_prev, plane_from_next, p, n_shards, fill, axis):
+    """ghost_lo[p] = plane_from_prev = block[p-1][-1]; symmetric for hi."""
+    if n_shards == 1:
+        lo = jnp.full_like(plane_from_prev, fill)
+        hi = jnp.full_like(plane_from_next, fill)
+        return lo, hi
+    lo = lax.ppermute(plane_from_prev, axis,
+                      [(i, i + 1) for i in range(n_shards - 1)])
+    hi = lax.ppermute(plane_from_next, axis,
+                      [(i + 1, i) for i in range(n_shards - 1)])
+    lo = jnp.where(p == 0, fill, lo)
+    hi = jnp.where(p == n_shards - 1, fill, hi)
+    return lo, hi
+
+
+def _local_compress(d_ext, base, max_iter=64):
+    """Path compression with global-id pointers confined to the extended
+    block: local position = gid - base.  Negative entries (unmasked CC
+    sentinels / edge-shard ghost self-ids) are fixed points."""
+    size = d_ext.size
+
+    def jump(d):
+        flat = d.ravel()
+        lidx = jnp.clip(flat - base, 0, size - 1)
+        nd = flat[lidx]
+        return jnp.where(flat >= 0, nd, flat).reshape(d.shape)
+
+    def cond(s):
+        _, ch, i = s
+        return ch & (i < max_iter)
+
+    def body(s):
+        d, _, i = s
+        nd = jump(d)
+        return nd, jnp.any(nd != d), i + jnp.int32(1)
+
+    d, _, iters = lax.while_loop(cond, body,
+                                 (d_ext, jnp.asarray(True), jnp.int32(0)))
+    return d, iters
+
+
+def _boundary_pos(gid, x_local, n_shards, R):
+    """Map a global id to its (row, col) in the gathered (P, 2, R) table.
+    Returns (is_boundary, flat_row_index)."""
+    x = gid // R
+    r = gid % R
+    s = x // x_local
+    xin = x % x_local
+    is_b = ((xin == 0) | (xin == x_local - 1)) & (s >= 0) & (s < n_shards)
+    j = jnp.where(xin == x_local - 1, 1, 0)
+    return is_b, (s * 2 + j) * R + r
+
+
+def _table_compress(T, x_local, n_shards, R, max_iter=64):
+    """Pointer doubling on the gathered ghost table (Alg. 2 lines 15-25).
+    Entries < 0 (unmasked, CC only) are fixed."""
+    def lookup(t):
+        g = t.ravel()
+        is_b, pos = _boundary_pos(jnp.clip(g, 0), x_local, n_shards, R)
+        tv = t.ravel()[jnp.clip(pos, 0, t.size - 1)]
+        return jnp.where((g >= 0) & is_b, tv, g).reshape(t.shape)
+
+    def cond(s):
+        _, ch, i = s
+        return ch & (i < max_iter)
+
+    def body(s):
+        t, _, i = s
+        nt = lookup(t)
+        return nt, jnp.any(nt != t), i + jnp.int32(1)
+
+    T, _, iters = lax.while_loop(cond, body,
+                                 (T, jnp.asarray(True), jnp.int32(0)))
+    return T, iters
+
+
+# --- MS manifolds ------------------------------------------------------------
+
+
+def _manifold_block(order_blk, *, n_shards, connectivity, axis):
+    """Always runs the *descending* direction; the ascending manifold is
+    obtained by flipping the order field outside (keeps the -1 halo fill
+    strictly below every candidate)."""
+    p = lax.axis_index(axis)
+    x_local = order_blk.shape[0]
+    rest = order_blk.shape[1:]
+    R = int(np.prod(rest))
+
+    # 1. order halo (fill -1: below every real order value, never steepest)
+    lo, hi = _halo(order_blk[-1], order_blk[0], p, n_shards, -1, axis)
+    ext = jnp.concatenate([lo[None], order_blk, hi[None]], axis=0)
+
+    # 2. steepest init with global ids; ghosts pretend to be maxima
+    base = (p * x_local - 1) * R
+    ptr = grid_steepest(ext, connectivity, descending=True,
+                        id_offset=base).reshape(ext.shape)
+    gids = jnp.arange(ext.size, dtype=jnp.int32).reshape(ext.shape) + base
+    xs = jnp.arange(x_local + 2)
+    is_ghost = ((xs == 0) | (xs == x_local + 1)).reshape(
+        (-1,) + (1,) * len(rest))
+    d_ext = jnp.where(is_ghost, gids, ptr)
+
+    # 3. local compression (Alg. 1 lines 9-19)
+    d_ext, local_iters = _local_compress(d_ext, base)
+
+    # 4. the single communication phase (Alg. 2)
+    bt = jnp.stack([d_ext[1].ravel(), d_ext[x_local].ravel()])  # (2, R)
+    T = lax.all_gather(bt, axis)                                # (P, 2, R)
+
+    # 5. ghost-table compression (identical on every device)
+    T, table_iters = _table_compress(T, x_local, n_shards, R)
+
+    # 6. final substitution (Alg. 2 lines 27-33)
+    owned = d_ext[1:x_local + 1].ravel()
+    is_b, pos = _boundary_pos(owned, x_local, n_shards, R)
+    final = jnp.where(is_b, T.ravel()[jnp.clip(pos, 0, T.size - 1)], owned)
+
+    stats = DPCStats(
+        local_iters=lax.pmax(local_iters, axis),
+        table_iters=table_iters,  # identical on all devices (same table)
+        stitch_rounds=jnp.int32(0),
+        ghost_bytes=jnp.float32(T.size) * 4,
+        masked_ghost_fraction=jnp.float32(1.0),
+    )
+    return final.reshape(order_blk.shape), stats
+
+
+def distributed_manifold(order, mesh: Mesh, connectivity: int = 6,
+                         descending: bool = True):
+    """Descending (or ascending) manifold of a slab-sharded order field.
+
+    order: (X, ...) int array, X divisible by mesh axis size.  Returns the
+    label grid (sharded the same way) and replicated DPCStats.
+    """
+    n_shards = mesh.shape[AXIS]
+    if order.shape[0] % n_shards:
+        raise ValueError(f"axis 0 ({order.shape[0]}) not divisible by "
+                         f"{n_shards} shards")
+    if not descending:
+        order = order.size - 1 - order  # ascending = descending on flipped order
+    fn = partial(_manifold_block, n_shards=n_shards,
+                 connectivity=connectivity, axis=AXIS)
+    ndim = order.ndim
+    sharded = P(AXIS, *([None] * (ndim - 1)))
+    mapped = jax.shard_map(
+        fn, mesh=mesh, in_specs=(sharded,),
+        out_specs=(sharded, DPCStats(*([P()] * 5))), check_vma=False)
+    return mapped(order)
+
+
+# --- connected components ----------------------------------------------------
+
+
+def _ext_stitch(d, mask_ext, connectivity, base, sentinel_pos):
+    """Stitch on the extended block with global-id labels (Alg. 3 ll. 25-29):
+    scatter-max at local position d[v]-base."""
+    from .steepest import shift_fill  # local import to avoid cycle at module load
+    out = d.ravel()
+    m = mask_ext
+    for off in neighbor_offsets(d.ndim, connectivity):
+        u_label = shift_fill(d, off, -1).ravel()
+        valid = m.ravel() & shift_fill(m, off, False).ravel() & (u_label >= 0)
+        tgt = jnp.where(valid, out - base, sentinel_pos)
+        out = out.at[tgt].max(jnp.where(valid, u_label, -1), mode="drop")
+    return out.reshape(d.shape)
+
+
+def _cc_local_fixpoint(d_ext, mask_ext, connectivity, base, max_rounds=64):
+    d, it0 = _local_compress(d_ext, base)
+    size = d_ext.size
+
+    def cond(s):
+        _, ch, r, _ = s
+        return ch & (r < max_rounds)
+
+    def body(s):
+        cur, _, r, its = s
+        st = _ext_stitch(cur, mask_ext, connectivity, base, size)
+        nxt, it = _local_compress(st, base)
+        return nxt, jnp.any(nxt != cur), r + jnp.int32(1), its + it
+
+    d, _, rounds, its = lax.while_loop(
+        cond, body, (d, jnp.asarray(True), jnp.int32(0), it0))
+    return d, rounds, its
+
+
+def _cut_shifts(ndim, connectivity):
+    """Trailing-dim offsets of neighbor pairs that cross a slab cut (dx=+1)."""
+    return [off[1:] for off in neighbor_offsets(ndim, connectivity)
+            if off[0] == 1]
+
+
+def _table_propagate(Tstar, Mtab, cut_shifts, rest_shape, max_iter=64):
+    """Hook + propagate on the gathered table: fixpoint of
+      (a) max across masked cut edges (plane (i,1) <-> plane (i+1,0)),
+      (b) max within equal-original-label groups (sorted-runs segment_max).
+    Computes, for every boundary position, the largest label of its global
+    component.  Deviation (d2): the paper's path compression alone cannot
+    perform these merges."""
+    from .steepest import shift_fill
+    n_shards = Tstar.shape[0]
+    flat_vals = Tstar.ravel()
+    msize = flat_vals.shape[0]
+    perm = jnp.argsort(flat_vals)
+    sorted_vals = flat_vals[perm]
+    run_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_vals[1:] != sorted_vals[:-1]])
+    run_id = jnp.cumsum(run_start) - 1
+    inv_perm = jnp.zeros(msize, dtype=jnp.int32).at[perm].set(
+        jnp.arange(msize, dtype=jnp.int32))
+
+    def group_max(L):
+        ls = L.ravel()[perm]
+        gm = jax.ops.segment_max(ls, run_id, num_segments=msize)
+        return gm[run_id][inv_perm].reshape(L.shape)
+
+    def cut_max(L):
+        # L, Mtab: (P, 2, *rest); position (i,1,q) <-> (i+1,0,q+s)
+        for s in cut_shifts:
+            a = L[:-1, 1]            # plane i (last owned)
+            b = L[1:, 0]             # plane i+1 (first owned)
+            ma = Mtab[:-1, 1]
+            mb = Mtab[1:, 0]
+            b_at_a = shift_fill(b, (0,) + tuple(s), -1)
+            mb_at_a = shift_fill(mb, (0,) + tuple(s), False)
+            new_a = jnp.where(ma & mb_at_a, jnp.maximum(a, b_at_a), a)
+            neg = tuple(-x for x in s)
+            a_at_b = shift_fill(a, (0,) + neg, -1)
+            ma_at_b = shift_fill(ma, (0,) + neg, False)
+            new_b = jnp.where(mb & ma_at_b, jnp.maximum(b, a_at_b), b)
+            L = L.at[:-1, 1].set(new_a).at[1:, 0].set(new_b)
+        return L
+
+    def cond(st):
+        _, ch, i = st
+        return ch & (i < max_iter)
+
+    def body(st):
+        L, _, i = st
+        nxt = group_max(cut_max(L))
+        return nxt, jnp.any(nxt != L), i + jnp.int32(1)
+
+    L, _, iters = lax.while_loop(
+        cond, body, (Tstar, jnp.asarray(True), jnp.int32(0)))
+    return L, (perm, sorted_vals, run_id), iters
+
+
+def _cc_block(mask_blk, *, n_shards, connectivity, axis,
+              gather_mask: bool = True):
+    """gather_mask=False is the §Perf variant: the boundary mask is exactly
+    (T >= 0) — labels are -1 where unmasked — so the mask all-gather is
+    redundant and dropped (20% less exchange traffic, bit-identical)."""
+    p = lax.axis_index(axis)
+    x_local = mask_blk.shape[0]
+    rest = mask_blk.shape[1:]
+    R = int(np.prod(rest))
+
+    # 1. mask halo
+    lo, hi = _halo(mask_blk[-1], mask_blk[0], p, n_shards, False, axis)
+    mask_ext = jnp.concatenate([lo[None], mask_blk, hi[None]], axis=0)
+
+    # 2. init: largest masked neighbor id; masked ghosts pretend self
+    base = (p * x_local - 1) * R
+    d0 = grid_mask_argmax(mask_ext, connectivity,
+                          id_offset=base).reshape(mask_ext.shape)
+    gids = jnp.arange(mask_ext.size, dtype=jnp.int32).reshape(
+        mask_ext.shape) + base
+    xs = jnp.arange(x_local + 2)
+    is_ghost = ((xs == 0) | (xs == x_local + 1)).reshape(
+        (-1,) + (1,) * len(rest))
+    d_ext = jnp.where(is_ghost & mask_ext, gids, d0)
+
+    # 3. local CC fixpoint (stitch + compress, Alg. 3)
+    d_ext, stitch_rounds, local_iters = _cc_local_fixpoint(
+        d_ext, mask_ext, connectivity, base)
+
+    # 4. the single communication phase: labels (+ masks) of boundary planes
+    bt = jnp.stack([d_ext[1].reshape(rest), d_ext[x_local].reshape(rest)])
+    T = lax.all_gather(bt, axis)   # (P, 2, *rest)
+    if gather_mask:
+        bm = jnp.stack([mask_ext[1], mask_ext[x_local]])
+        M = lax.all_gather(bm, axis)
+    else:
+        M = T >= 0                 # labels are -1 exactly where unmasked
+
+    # 5a. positional chase (the paper's table compression — resolves chains
+    #     through ghost labels, e.g. a part labeled with a ghost's id)
+    Tstar, table_iters = _table_compress(
+        T.reshape(n_shards, 2, R), x_local, n_shards, R)
+    Tstar = Tstar.reshape((n_shards, 2) + rest)
+    # 5b. hook + propagate (deviation (d2)): merge labels across cuts
+    G, (perm, sorted_vals, run_id), prop_iters = _table_propagate(
+        Tstar, M, _cut_shifts(mask_ext.ndim, connectivity), rest)
+
+    # 6. substitution: chase own label through the table, then take its
+    #    group's propagated maximum (value search over the sorted table)
+    owned = d_ext[1:x_local + 1].ravel()
+    is_b, pos = _boundary_pos(jnp.clip(owned, 0), x_local, n_shards, R)
+    chased = jnp.where((owned >= 0) & is_b,
+                       Tstar.ravel()[jnp.clip(pos, 0, Tstar.size - 1)], owned)
+    idx = jnp.searchsorted(sorted_vals, chased)
+    idx_c = jnp.clip(idx, 0, sorted_vals.shape[0] - 1)
+    found = sorted_vals[idx_c] == chased
+    g_sorted = G.ravel()[perm]
+    improved = jnp.where(found & (chased >= 0),
+                         jnp.maximum(g_sorted[idx_c], chased), chased)
+    final = jnp.where(owned < 0, -1, improved)
+
+    masked_frac = jnp.mean(M.astype(jnp.float32))
+    stats = DPCStats(
+        local_iters=lax.pmax(local_iters, axis),
+        table_iters=table_iters + prop_iters,
+        stitch_rounds=lax.pmax(stitch_rounds, axis),
+        ghost_bytes=jnp.float32(T.size) * 4
+        + (jnp.float32(M.size) if gather_mask else 0.0),
+        masked_ghost_fraction=masked_frac,
+    )
+    return final.reshape(mask_blk.shape), stats
+
+
+def distributed_connected_components(mask, mesh: Mesh, connectivity: int = 6,
+                                     gather_mask: bool = True):
+    """Mask-implicit connected components of a slab-sharded grid (Alg. 3 +
+    Alg. 2).  Returns (labels, DPCStats); labels carry the largest vertex id
+    of the component, -1 where unmasked.  gather_mask=False drops the
+    redundant mask exchange (§Perf)."""
+    n_shards = mesh.shape[AXIS]
+    if mask.shape[0] % n_shards:
+        raise ValueError(f"axis 0 ({mask.shape[0]}) not divisible by "
+                         f"{n_shards} shards")
+    fn = partial(_cc_block, n_shards=n_shards, connectivity=connectivity,
+                 axis=AXIS, gather_mask=gather_mask)
+    ndim = mask.ndim
+    sharded = P(AXIS, *([None] * (ndim - 1)))
+    mapped = jax.shard_map(
+        fn, mesh=mesh, in_specs=(sharded,),
+        out_specs=(sharded, DPCStats(*([P()] * 5))), check_vma=False)
+    return mapped(mask)

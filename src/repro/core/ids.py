@@ -1,0 +1,57 @@
+"""Id / order-field utilities shared by all DPC variants.
+
+The paper (§3.1, §4.1) requires an injective scalar field, enforced by a
+Simulation-of-Simplicity variant: globally sort vertices by (scalar, global
+id) and use the sort rank as the *order field*.  All DPC code operates on
+this integer order field, never on raw scalars.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def compute_order(scalars: jax.Array, ids: jax.Array | None = None) -> jax.Array:
+    """Global order field: rank of each vertex under (scalar, id) lexsort.
+
+    Mirrors TTK's ttkArrayPreconditioning (paper §4.1).  Returns int32 ranks
+    in [0, N) — a permutation, hence injective.
+    """
+    flat = scalars.ravel()
+    n = flat.shape[0]
+    if ids is None:
+        ids = jnp.arange(n, dtype=jnp.int32)
+    else:
+        ids = ids.ravel()
+    perm = jnp.lexsort((ids, flat))  # stable: primary scalar, tie-break id
+    order = jnp.zeros(n, dtype=jnp.int32).at[perm].set(
+        jnp.arange(n, dtype=jnp.int32)
+    )
+    return order.reshape(scalars.shape)
+
+
+def inverse_permutation(perm: jax.Array) -> jax.Array:
+    """inv[perm[i]] = i.  Used to map max-order values back to vertex ids."""
+    n = perm.shape[0]
+    return jnp.zeros(n, dtype=perm.dtype).at[perm.ravel()].set(
+        jnp.arange(n, dtype=perm.dtype)
+    )
+
+
+def flat_ids(shape, dtype=jnp.int32) -> jax.Array:
+    """Row-major flat id grid for a structured grid of `shape`."""
+    n = int(np.prod(shape))
+    return jnp.arange(n, dtype=dtype).reshape(shape)
+
+
+def compact_labels(labels: jax.Array, fill_value: int = -1):
+    """Relabel arbitrary label values to [0, k).  Not jit-shape-stable in k;
+    returns (compact, k).  Negative labels (unmasked) keep `fill_value`."""
+    flat = labels.ravel()
+    uniq = jnp.unique(flat, size=flat.shape[0], fill_value=jnp.iinfo(flat.dtype).max)
+    idx = jnp.searchsorted(uniq, flat)
+    neg = jnp.searchsorted(uniq, 0)  # number of negative labels
+    compact = jnp.where(flat < 0, fill_value, idx - neg)
+    k = int((uniq != jnp.iinfo(flat.dtype).max).sum() - int(neg))
+    return compact.reshape(labels.shape), k

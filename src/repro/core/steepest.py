@@ -1,0 +1,135 @@
+"""Steepest-neighbor initialisation (paper Alg. 1 lines 3-5, Alg. 3 line 6).
+
+Two mesh regimes:
+  * structured grids — stencil shifts over the axis/Freudenthal neighborhood
+    (TTK's implicit triangulation of a structured grid yields the 14-neighbor
+    Kuhn/Freudenthal stencil in 3D, 6-neighbor in 2D);
+  * unstructured graphs — edge lists + `segment_max`, the same gather/scatter
+    regime as GNN message passing.
+
+`descending=True` points each vertex at its largest-order neighbor (steepest
+ascent -> descending manifold terminating in maxima); `descending=False`
+flips the order field (steepest descent -> ascending manifold / minima).
+A vertex larger than all its neighbors points at itself (root).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .ids import inverse_permutation
+
+# --- neighborhood offset tables -------------------------------------------
+
+_OFF_2D_4 = [(1, 0), (-1, 0), (0, 1), (0, -1)]
+# Freudenthal triangulation of a 2D grid: axis edges + one diagonal
+_OFF_2D_6 = _OFF_2D_4 + [(1, 1), (-1, -1)]
+_OFF_3D_6 = [(1, 0, 0), (-1, 0, 0), (0, 1, 0), (0, -1, 0), (0, 0, 1), (0, 0, -1)]
+# Kuhn/Freudenthal 3D: all nonzero {0,1}^3 offsets and their negatives
+_OFF_3D_14 = _OFF_3D_6 + [
+    (1, 1, 0), (-1, -1, 0), (0, 1, 1), (0, -1, -1),
+    (1, 0, 1), (-1, 0, -1), (1, 1, 1), (-1, -1, -1),
+]
+
+
+def neighbor_offsets(ndim: int, connectivity: int):
+    table = {
+        (1, 2): [(1,), (-1,)],
+        (2, 4): _OFF_2D_4,
+        (2, 6): _OFF_2D_6,
+        (3, 6): _OFF_3D_6,
+        (3, 14): _OFF_3D_14,
+    }
+    key = (ndim, connectivity)
+    if key not in table:
+        raise ValueError(f"unsupported (ndim, connectivity)={key}")
+    return table[key]
+
+
+def shift_fill(a: jax.Array, off, fill) -> jax.Array:
+    """result[p] = a[p + off], `fill` outside the domain."""
+    pads = [(max(-o, 0), max(o, 0)) for o in off]
+    padded = jnp.pad(a, pads, constant_values=fill)
+    slices = tuple(
+        slice(max(o, 0), max(o, 0) + s) for o, s in zip(off, a.shape)
+    )
+    return padded[slices]
+
+
+# --- structured grids -------------------------------------------------------
+
+
+def grid_steepest(order: jax.Array, connectivity: int = 6,
+                  descending: bool = True, id_offset=0) -> jax.Array:
+    """Pointer init on a structured grid.
+
+    Args:
+      order: integer order field (any shape, unique values).
+      id_offset: added to the returned flat indices (used by the distributed
+        slab decomposition to emit *global* ids from a local block).
+
+    Returns flat pointer array of `order.size` int32 (self for local extrema).
+    """
+    key = order if descending else (-order)
+    n = order.size
+    dtype = jnp.int32 if n < 2**31 else jnp.int64
+    idx = (jnp.arange(n, dtype=dtype) + id_offset).reshape(order.shape)
+    fill_key = jnp.iinfo(key.dtype).min
+    best_val, best_idx = key, idx
+    for off in neighbor_offsets(order.ndim, connectivity):
+        cand_val = shift_fill(key, off, fill_key)
+        cand_idx = shift_fill(idx, off, -1)
+        better = cand_val > best_val
+        best_val = jnp.where(better, cand_val, best_val)
+        best_idx = jnp.where(better, cand_idx, best_idx)
+    return best_idx.ravel()
+
+
+def grid_mask_argmax(mask: jax.Array, connectivity: int = 6,
+                     id_offset=0) -> jax.Array:
+    """Pointer init for connected components (Alg. 3 line 6): largest masked
+    neighbor id (including self); -1 for unmasked vertices."""
+    n = mask.size
+    dtype = jnp.int32 if n < 2**31 else jnp.int64
+    idx = (jnp.arange(n, dtype=dtype) + id_offset).reshape(mask.shape)
+    key = jnp.where(mask, idx, dtype(-1))
+    best = key
+    for off in neighbor_offsets(mask.ndim, connectivity):
+        cand = shift_fill(key, off, dtype(-1))
+        best = jnp.maximum(best, cand)
+    return jnp.where(mask, best, dtype(-1)).ravel()
+
+
+# --- unstructured graphs ----------------------------------------------------
+
+
+def graph_steepest(order: jax.Array, senders: jax.Array, receivers: jax.Array,
+                   descending: bool = True) -> jax.Array:
+    """Pointer init on an edge-list graph (directed edges sender->receiver;
+    pass both directions for undirected meshes).
+
+    order must be a permutation of [0, n) so that the max order value can be
+    inverted back to a vertex id.
+    """
+    n = order.shape[0]
+    key = order if descending else (n - 1 - order)
+    inv = inverse_permutation(key)
+    neigh_max = jax.ops.segment_max(
+        key[receivers], senders, num_segments=n, indices_are_sorted=False
+    )
+    neigh_max = jnp.maximum(neigh_max, key)  # include self; fixes -inf/empty
+    return jnp.where(neigh_max > key, inv[neigh_max], jnp.arange(n, dtype=jnp.int32))
+
+
+def graph_mask_argmax(mask: jax.Array, senders: jax.Array,
+                      receivers: jax.Array) -> jax.Array:
+    """CC pointer init on an edge-list graph; -1 for unmasked vertices.
+    Edges incident to unmasked vertices are ignored (paper Alg. 3)."""
+    n = mask.shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    key = jnp.where(mask, ids, -1)
+    edge_val = jnp.where(mask[senders] & mask[receivers], key[receivers], -1)
+    neigh = jax.ops.segment_max(edge_val, senders, num_segments=n)
+    best = jnp.maximum(jnp.maximum(neigh, key), -1)
+    return jnp.where(mask, best, -1)

@@ -1,0 +1,1 @@
+from .perlin import perlin_noise

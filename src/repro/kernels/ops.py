@@ -1,0 +1,58 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the fused kernels run compiled (`interpret=False`); on CPU (this
+container, and any unit-test environment) they execute in interpret mode and
+are validated against the pure-jnp oracles in ref.py.  `impl="ref"` forces
+the oracle — the dry-run lowers models with the ref implementations so the
+HLO stays portable across backends.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .steepest_neighbor import steepest_neighbor as _steepest_kernel
+from .block_pathcompress import block_pathcompress as _bpc_kernel
+from .flash_attention import flash_attention as _flash_kernel
+from .segment_bag import segment_bag as _bag_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def steepest_neighbor(order, connectivity: int = 6, impl: str = "auto",
+                      block_x: int = 8):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        from repro.core.steepest import grid_steepest
+        return grid_steepest(order, connectivity).reshape(order.shape)
+    return _steepest_kernel(order, connectivity, block_x=block_x,
+                            interpret=not _on_tpu())
+
+
+def block_pathcompress(d, rounds: int = 4, block: int = 4096,
+                       impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.block_pathcompress_ref(d, rounds)  # block = whole array
+    return _bpc_kernel(d, rounds=rounds, block=block,
+                       interpret=not _on_tpu())
+
+
+def flash_attention(q, k, v, causal: bool = False, impl: str = "auto",
+                    block_q: int = 128, block_k: int = 128):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return _flash_kernel(q, k, v, causal=causal, block_q=block_q,
+                         block_k=block_k, interpret=not _on_tpu())
+
+
+def embedding_bag(table, ids, impl: str = "auto", vocab_block: int = 2048,
+                  batch_block: int = 256):
+    """Fused EmbeddingBag.  The tiled kernel wins when batch*L sweeps a
+    meaningful fraction of the table (train/bulk shapes); sparse-read
+    serving keeps the XLA gather path."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        from repro.models.bst import embedding_bag as _ref_bag
+        return _ref_bag(table, ids)
+    return _bag_kernel(table, ids, vocab_block=vocab_block,
+                       batch_block=batch_block, interpret=not _on_tpu())

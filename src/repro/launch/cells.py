@@ -1,0 +1,385 @@
+"""Cell construction: one (architecture x input-shape) cell = a step
+function + abstract input shapes + shardings for a given mesh.  The dry-run
+lowers and compiles every cell; train/serve launchers feed the same cells
+real data."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.models import lm, gnn, bst
+from repro.optim import adamw
+from repro.runtime.meshctx import logical_to_spec
+from repro.launch.mesh import make_flat_mesh
+
+
+def S(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    family: str
+    cfg: Any
+    shape: dict
+    step_fn: Callable
+    arg_shapes: tuple           # pytree of ShapeDtypeStruct
+    arg_shardings: tuple        # matching NamedShardings
+    donate_argnums: tuple = ()
+    note: str = ""
+
+    @property
+    def name(self):
+        return f"{self.arch_id}:{self.shape_name}"
+
+
+def _ns(mesh, logical_tree):
+    """Translate a pytree of logical-axis tuples into NamedShardings."""
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, logical_to_spec(spec, mesh)),
+        logical_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _like(tree, fn):
+    return jax.tree.map(fn, tree)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+# --- LM cells -----------------------------------------------------------------
+
+
+def _lm_state_shapes(cfg, optimizer):
+    params = jax.eval_shape(partial(lm.init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    opt = jax.eval_shape(optimizer.init, params)
+    return params, opt
+
+
+def _lm_state_specs(cfg, mesh):
+    pspec = lm.param_logical_specs(cfg)
+    params = _ns(mesh, pspec)
+    mom = _ns(mesh, pspec)
+    opt = {"m": mom, "v": _ns(mesh, pspec),
+           "step": NamedSharding(mesh, P())}
+    return params, opt
+
+
+def _cache_logical(cfg, shape_name):
+    """KV cache (L, B, Hkv, S, dh): context-parallel on the cache sequence;
+    batch on dp when it shards."""
+    if shape_name == "long_500k":
+        return (None, None, None, "ep_all", None)
+    return (None, "dp", None, "sp", None)
+
+
+def build_lm_cell(arch_id, mod, shape_name, shape, mesh, smoke) -> Cell:
+    cfg = mod.smoke_config() if smoke else mod.full_config()
+    if cfg.moe is not None:
+        # local (shard-local) dispatch needs the static dp size
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dp_shards=_dp_size(mesh)))
+    b, sq = shape["batch"], shape["seq"]
+    kind = shape["kind"]
+    tok = S((b, sq), jnp.int32)
+    tok_sh = NamedSharding(mesh, logical_to_spec(("dp", None), mesh))
+
+    if kind == "train":
+        opt = adamw(1e-4, moment_dtype=cfg.opt_moment_dtype)
+        pshape, oshape = _lm_state_shapes(cfg, opt)
+        pspec, ospec = _lm_state_specs(cfg, mesh)
+
+        def step(state, batch):
+            params, ostate = state
+            (loss, metrics), grads = jax.value_and_grad(
+                lm.loss_fn, has_aux=True)(params, batch, cfg)
+            params, ostate, om = opt.update(grads, ostate, params)
+            return (params, ostate), {"loss": loss, **metrics, **om}
+
+        return Cell(arch_id, shape_name, "lm", cfg, shape, step,
+                    ((pshape, oshape), {"tokens": tok, "labels": tok}),
+                    ((pspec, ospec), {"tokens": tok_sh, "labels": tok_sh}),
+                    donate_argnums=(0,))
+
+    pshape = jax.eval_shape(partial(lm.init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    pspec = _ns(mesh, lm.param_logical_specs(cfg))
+
+    if kind == "prefill":
+        def step(params, tokens):
+            return lm.prefill(params, tokens, cfg)
+        return Cell(arch_id, shape_name, "lm", cfg, shape, step,
+                    (pshape, tok), (pspec, tok_sh))
+
+    # decode: one new token against a seq-long cache
+    cache_shape = jax.eval_shape(
+        partial(lm.init_kv_cache, cfg, b, sq))
+    clog = _cache_logical(cfg, shape_name)
+    cache_spec = {
+        "k": NamedSharding(mesh, logical_to_spec(clog, mesh)),
+        "v": NamedSharding(mesh, logical_to_spec(clog, mesh)),
+        "length": NamedSharding(mesh, P()),
+    }
+    new_tok = S((b, 1), jnp.int32)
+    new_tok_sh = NamedSharding(
+        mesh, logical_to_spec(("dp", None) if b > 1 else (None, None), mesh))
+
+    def step(params, cache, tokens):
+        return lm.decode_step(params, cache, tokens, cfg)
+
+    return Cell(arch_id, shape_name, "lm", cfg, shape, step,
+                (pshape, cache_shape, new_tok),
+                (pspec, cache_spec, new_tok_sh), donate_argnums=(1,))
+
+
+# --- GNN cells ----------------------------------------------------------------
+
+
+def _pad512(n: int) -> int:
+    """Round a sharded leading dim up to a 512 multiple so the same cell
+    lowers on both production meshes (padding is masked; standard practice
+    for uneven graph partitions — noted in EXPERIMENTS.md §Dry-run)."""
+    return ((n + 511) // 512) * 512
+
+
+def _graph_shapes(arch, cfg, shp, smoke):
+    """Abstract GraphBatch for the cell (DESIGN.md: feature semantics are
+    adapted per arch — geometric models get positions/species, attribute
+    models get d_feat features)."""
+    kind = shp["kind"]
+    if kind == "batched":
+        n = shp["batch"] * shp["n_nodes"]
+        e = shp["batch"] * shp["n_edges"]
+        g = shp["batch"]
+    elif kind == "sampled":
+        n, e, g = shp["sample_nodes"], shp["sample_edges"], 1
+    else:
+        n, e, g = shp["n_nodes"], shp["n_edges"], 1
+    n, e = _pad512(n), _pad512(e)
+    t = 4 * e  # triplet budget (dimenet)
+    base = {
+        "senders": S((e,), jnp.int32), "receivers": S((e,), jnp.int32),
+        "node_mask": S((n,), jnp.bool_), "edge_mask": S((e,), jnp.bool_),
+        "graph_ids": S((n,), jnp.int32),
+    }
+    if arch == "gat":
+        base["node_feat"] = S((n, shp.get("d_feat", 32)), jnp.float32)
+        base["labels"] = S((n,), jnp.int32)
+    elif arch == "meshgraphnet":
+        base["node_feat"] = S((n, cfg.d_node_in), jnp.float32)
+        base["edge_feat"] = S((e, cfg.d_edge_in), jnp.float32)
+        base["labels"] = S((n, cfg.d_out), jnp.float32)
+    else:  # geometric: schnet / dimenet
+        base["node_feat"] = S((n, 1), jnp.float32)   # species
+        base["positions"] = S((n, 3), jnp.float32)
+        base["labels"] = S((g,), jnp.float32)
+        if arch == "dimenet":
+            base["triplet_src"] = S((t,), jnp.int32)
+            base["triplet_dst"] = S((t,), jnp.int32)
+            base["triplet_mask"] = S((t,), jnp.bool_)
+    return base, g
+
+
+def _adapt_gnn_cfg(cfg, shp):
+    if cfg.arch == "gat":
+        return dataclasses.replace(cfg, d_in=shp.get("d_feat", 32),
+                                   n_classes=shp.get("n_classes", 7))
+    if cfg.arch == "meshgraphnet" and "d_feat" in shp:
+        return dataclasses.replace(cfg, d_node_in=shp["d_feat"])
+    return cfg
+
+
+def build_gnn_cell(arch_id, mod, shape_name, shape, mesh, smoke) -> Cell:
+    cfg = mod.smoke_config() if smoke else mod.full_config()
+    cfg = _adapt_gnn_cfg(cfg, shape)
+    graph_shapes, n_graphs = _graph_shapes(cfg.arch, cfg, shape, smoke)
+    params = jax.eval_shape(partial(gnn.init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    opt = adamw(1e-4)
+    oshape = jax.eval_shape(opt.init, params)
+
+    # graph arrays sharded over every mesh axis on the leading dim (padded
+    # to 512 multiples); small per-graph arrays (energy labels) replicate;
+    # model params replicated (they are tiny) — DESIGN.md §5
+    total = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+
+    def gspec(v):
+        if v.shape and v.shape[0] % total == 0:
+            return NamedSharding(mesh, logical_to_spec(
+                ("ep_all",) + (None,) * (len(v.shape) - 1), mesh))
+        return NamedSharding(mesh, P())
+
+    gshard = {k: gspec(v) for k, v in graph_shapes.items()}
+    repl = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
+    orepl = jax.tree.map(lambda _: NamedSharding(mesh, P()), oshape)
+
+    def step(state, graph):
+        p, o = state
+        graph = dict(graph, n_graphs=n_graphs)
+        (loss, metrics), grads = jax.value_and_grad(
+            gnn.loss_fn, has_aux=True)(p, graph, cfg)
+        p, o, om = opt.update(grads, o, p)
+        return (p, o), {"loss": loss, **metrics, **om}
+
+    return Cell(arch_id, shape_name, "gnn", cfg, shape, step,
+                ((params, oshape), graph_shapes),
+                ((repl, orepl), gshard), donate_argnums=(0,))
+
+
+# --- BST cells ----------------------------------------------------------------
+
+
+def build_bst_cell(arch_id, mod, shape_name, shape, mesh, smoke) -> Cell:
+    cfg = mod.smoke_config() if smoke else mod.full_config()
+    b = shape["batch"]
+    kind = shape["kind"]
+    params = jax.eval_shape(partial(bst.init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    pspec = _ns(mesh, bst.param_logical_specs(cfg))
+    dp = lambda nd: NamedSharding(
+        mesh, logical_to_spec(("dp",) + (None,) * (nd - 1), mesh))
+    batch_shapes = {
+        "hist_items": S((b, cfg.seq_len), jnp.int32),
+        "target_item": S((b,), jnp.int32),
+        "profile_ids": S((b, cfg.n_profile_fields), jnp.int32),
+        "multihot_ids": S((b, cfg.n_multihot_fields, cfg.multihot_len),
+                          jnp.int32),
+    }
+    if kind == "train":
+        batch_shapes["labels"] = S((b,), jnp.float32)
+    bshard = {k: dp(len(v.shape)) for k, v in batch_shapes.items()}
+    if b == 1:  # retrieval_cand: can't shard a singleton batch
+        bshard = {k: NamedSharding(mesh, P()) for k in batch_shapes}
+
+    if kind == "train":
+        opt = adamw(1e-3)
+        oshape = jax.eval_shape(opt.init, params)
+        ospec = {"m": _ns(mesh, bst.param_logical_specs(cfg)),
+                 "v": _ns(mesh, bst.param_logical_specs(cfg)),
+                 "step": NamedSharding(mesh, P())}
+
+        def step(state, batch):
+            p, o = state
+            (loss, metrics), grads = jax.value_and_grad(
+                bst.loss_fn, has_aux=True)(p, batch, cfg)
+            p, o, om = opt.update(grads, o, p)
+            return (p, o), {"loss": loss, **metrics, **om}
+
+        return Cell(arch_id, shape_name, "recsys", cfg, shape, step,
+                    ((params, oshape), batch_shapes),
+                    ((pspec, ospec), bshard), donate_argnums=(0,))
+
+    if kind == "serve":
+        def step(params, batch):
+            return bst.forward(params, batch, cfg)
+        return Cell(arch_id, shape_name, "recsys", cfg, shape, step,
+                    (params, batch_shapes), (pspec, bshard))
+
+    # retrieval: candidate axis sharded on "data" (1M % 512 != 0; data=16
+    # divides it on both meshes — noted in EXPERIMENTS.md §Dry-run)
+    nc = shape["n_candidates"]
+    batch_shapes["candidates"] = S((b, nc), jnp.int32)
+    bshard["candidates"] = NamedSharding(
+        mesh, logical_to_spec((None, "fsdp"), mesh))
+
+    def step(params, batch):
+        return bst.retrieval_step(params, batch, cfg, top_k=100)
+
+    return Cell(arch_id, shape_name, "recsys", cfg, shape, step,
+                (params, batch_shapes), (pspec, bshard))
+
+
+# --- DPC cells (the paper's own workload) --------------------------------------
+
+
+def build_dpc_cell(arch_id, mod, shape_name, shape, mesh, smoke) -> Cell:
+    from repro.core import (distributed_manifold,
+                            distributed_connected_components)
+    cfg = mod.smoke_config() if smoke else mod.full_config()
+    dims = shape["dims"]
+    flat = make_flat_mesh(mesh)
+    sh = NamedSharding(flat, P("shards", *([None] * (len(dims) - 1))))
+
+    if shape["kind"] == "dpc":
+        inp = S(dims, jnp.int32)
+
+        def step(order):
+            labels, stats = distributed_manifold(order, flat,
+                                                 cfg.connectivity)
+            return labels, stats
+    else:
+        inp = S(dims, jnp.bool_)
+
+        def step(mask):
+            labels, stats = distributed_connected_components(
+                mask, flat, cfg.connectivity,
+                gather_mask=getattr(cfg, "gather_mask", True))
+            return labels, stats
+
+    return Cell(arch_id, shape_name, "dpc", cfg, shape, step,
+                (inp,), (sh,), note="lowered on the flattened 1-D mesh")
+
+
+# --- registry -----------------------------------------------------------------
+
+_BUILDERS = {"lm": build_lm_cell, "gnn": build_gnn_cell,
+             "recsys": build_bst_cell, "dpc": build_dpc_cell}
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh,
+               smoke: bool = False, cfg_transform=None) -> Cell:
+    """cfg_transform(cfg) -> cfg lets the roofline tooling lower
+    layer-count variants (lax.scan bodies are cost-analyzed once, so
+    per-layer costs are recovered by extrapolating L=1 vs L=2 lowers)."""
+    mod = configs.get(arch_id)
+    shapes = mod.SMOKE_SHAPES if smoke else mod.SHAPES
+    if shape_name not in shapes:
+        raise KeyError(f"{arch_id} has no shape {shape_name}; "
+                       f"options: {list(shapes)}")
+    if cfg_transform is not None:
+        mod = _TransformedModule(mod, cfg_transform)
+    return _BUILDERS[mod.FAMILY](arch_id, mod, shape_name,
+                                 shapes[shape_name], mesh, smoke)
+
+
+class _TransformedModule:
+    def __init__(self, mod, transform):
+        self._mod = mod
+        self._transform = transform
+
+    def __getattr__(self, name):
+        return getattr(self._mod, name)
+
+    def full_config(self):
+        return self._transform(self._mod.full_config())
+
+    def smoke_config(self):
+        return self._transform(self._mod.smoke_config())
+
+
+def all_cells(include_dpc: bool = True):
+    """The full assignment matrix: 10 archs x 4 shapes (+ DPC cells)."""
+    out = []
+    for arch in configs.ARCH_IDS:
+        if arch == "dpc_grid" and not include_dpc:
+            continue
+        mod = configs.get(arch)
+        for shape_name in mod.SHAPES:
+            out.append((arch, shape_name))
+    return out

@@ -1,0 +1,27 @@
+"""Production meshes.  Functions (not module constants) so importing never
+touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_flat_mesh(mesh=None, name: str = "shards"):
+    """1-D view over the same devices — the DPC slab axis."""
+    if mesh is None:
+        mesh = make_production_mesh()
+    devices = mesh.devices.reshape(-1)
+    return jax.make_mesh((devices.size,), (name,), devices=devices)
+
+
+def make_smoke_mesh(n: int | None = None):
+    """Whatever this host has (tests / examples)."""
+    n = n or len(jax.devices())
+    shape = (1, n) if n > 1 else (1, 1)
+    return jax.make_mesh(shape, ("data", "model"))

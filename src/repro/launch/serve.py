@@ -1,0 +1,68 @@
+"""Batched-serving launcher: prefill + decode loop with a KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import lm
+from repro.launch.mesh import make_smoke_mesh
+from repro.runtime.meshctx import use_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    mod = configs.get(args.arch)
+    cfg = mod.smoke_config() if args.smoke else mod.full_config()
+    key = jax.random.PRNGKey(args.seed)
+    params = lm.init_params(key, cfg)
+    max_len = args.prompt_len + args.gen
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab)
+    prefill = jax.jit(lambda p, t: lm.prefill(p, t, cfg, max_len=max_len))
+    decode = jax.jit(lambda p, c, t: lm.decode_step(p, c, t, cfg),
+                     donate_argnums=1)
+
+    with use_mesh(make_smoke_mesh()):
+        t0 = time.perf_counter()
+        logits, cache = prefill(params, prompts)
+        jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+
+        out = [jnp.argmax(logits, -1)[:, None]]
+        t0 = time.perf_counter()
+        for _ in range(args.gen - 1):
+            logits, cache = decode(params, cache, out[-1])
+            out.append(jnp.argmax(logits, -1)[:, None])
+        jax.block_until_ready(logits)
+        t_decode = time.perf_counter() - t0
+
+    toks = np.asarray(jnp.concatenate(out, axis=1))
+    tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"[serve] prefill {args.batch}x{args.prompt_len} in "
+          f"{t_prefill * 1e3:.1f}ms; decode {args.gen - 1} steps at "
+          f"{tps:.1f} tok/s (incl. compile)")
+    print("[serve] sample continuation ids:", toks[0][:12])
+    assert np.isfinite(np.asarray(logits)).all()
+    return tps
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Behavior Sequence Transformer (Chen et al., arXiv:1905.06874).
+
+Huge sparse embedding tables -> transformer over the user behavior sequence
+(+ target item) -> MLP head.  JAX has no native EmbeddingBag: multi-hot
+profile fields use jnp.take + jax.ops.segment_sum (the assignment's required
+construction).  The item table is row-sharded on "tp"; the lookup is the
+hot path (see §Roofline).
+
+retrieval_cand: the pooled user vector scores 1M candidate item embeddings
+with one batched dot + lax.top_k (no loop)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.core import dense_init, embed_init, rms_norm
+from repro.kernels.ref import mha_ref
+from repro.runtime.meshctx import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp_dims: tuple = (1024, 512, 256)
+    item_vocab: int = 4_194_304        # 2**22 rows — the huge sparse table
+    n_profile_fields: int = 8          # single-hot categorical fields
+    profile_vocab: int = 100_000
+    n_multihot_fields: int = 2         # EmbeddingBag fields
+    multihot_vocab: int = 500_000
+    multihot_len: int = 16             # ids per bag (padded, -1 = empty)
+    d_ff: int = 128
+    param_dtype: Any = jnp.float32
+
+
+def init_params(key, cfg: BSTConfig):
+    ks = jax.random.split(key, 12 + 4 * cfg.n_blocks)
+    d = cfg.embed_dim
+    dt = cfg.param_dtype
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k1, k2, k3, k4 = jax.random.split(ks[12 + i], 4)
+        blocks.append({
+            "wqkv": dense_init(k1, d, 3 * d, dt),
+            "wo": dense_init(k2, d, d, dt),
+            "w1": dense_init(k3, d, cfg.d_ff, dt),
+            "w2": dense_init(k4, cfg.d_ff, d, dt),
+            "ln1": jnp.ones((d,), dt), "ln2": jnp.ones((d,), dt),
+        })
+    seq_total = cfg.seq_len + 1
+    mlp_in = seq_total * d + cfg.n_profile_fields * d \
+        + cfg.n_multihot_fields * d
+    mlp = []
+    dims = (mlp_in,) + cfg.mlp_dims + (1,)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        mlp.append({"w": dense_init(ks[4 + i % 8], a, b, dt),
+                    "b": jnp.zeros((b,), dt)})
+    return {
+        "item_embed": embed_init(ks[0], cfg.item_vocab, d, dt) * 0.02,
+        "pos_embed": embed_init(ks[1], seq_total, d, dt) * 0.02,
+        "profile_embed": embed_init(
+            ks[2], cfg.n_profile_fields * cfg.profile_vocab, d, dt) * 0.02,
+        "multihot_embed": embed_init(
+            ks[3], cfg.n_multihot_fields * cfg.multihot_vocab, d, dt) * 0.02,
+        "blocks": blocks,
+        "mlp": mlp,
+    }
+
+
+def param_logical_specs(cfg: BSTConfig):
+    block = {"wqkv": (None, None), "wo": (None, None),
+             "w1": (None, None), "w2": (None, None),
+             "ln1": (None,), "ln2": (None,)}
+    return {
+        "item_embed": ("tp", None),       # row-sharded huge table
+        "pos_embed": (None, None),
+        "profile_embed": ("tp", None),
+        "multihot_embed": ("tp", None),
+        "blocks": [block] * cfg.n_blocks,
+        "mlp": [{"w": ("fsdp", "tp"), "b": (None,)},
+                ] + [{"w": (None, None), "b": (None,)}] * len(cfg.mlp_dims),
+    }
+
+
+def embedding_bag(table, ids, mode: str = "sum"):
+    """EmbeddingBag via gather + segment-reduce.  ids: (B, L) with -1 pads.
+    Returns (B, D)."""
+    b, l = ids.shape
+    flat = ids.reshape(-1)
+    valid = flat >= 0
+    rows = jnp.take(table, jnp.clip(flat, 0), axis=0)
+    rows = jnp.where(valid[:, None], rows, 0.0)
+    seg = jnp.repeat(jnp.arange(b), l)
+    out = jax.ops.segment_sum(rows, seg, num_segments=b)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(valid.astype(out.dtype), seg,
+                                  num_segments=b)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def _transformer_pool(params, seq_emb, cfg: BSTConfig):
+    """seq_emb: (B, S+1, D) -> same shape after n_blocks of post-LN MHA+FFN
+    (BST uses one block)."""
+    b, s, d = seq_emb.shape
+    h = cfg.n_heads
+    dh = d // h
+    x = seq_emb
+    for blk in params["blocks"]:
+        qkv = x @ blk["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, s, h, dh).swapaxes(1, 2)
+        k = k.reshape(b, s, h, dh).swapaxes(1, 2)
+        v = v.reshape(b, s, h, dh).swapaxes(1, 2)
+        o = mha_ref(q, k, v, causal=False)
+        o = o.swapaxes(1, 2).reshape(b, s, d) @ blk["wo"]
+        x = rms_norm(x + o, blk["ln1"])
+        f = jax.nn.relu(x @ blk["w1"]) @ blk["w2"]
+        x = rms_norm(x + f, blk["ln2"])
+    return x
+
+
+def user_tower(params, batch, cfg: BSTConfig):
+    """Everything except the final MLP: returns (seq_repr (B, (S+1)*D),
+    profile_repr (B, F*D))."""
+    hist = batch["hist_items"]          # (B, S) item ids
+    target = batch["target_item"]       # (B,)
+    seq_ids = jnp.concatenate([hist, target[:, None]], axis=1)
+    seq = jnp.take(params["item_embed"], seq_ids, axis=0)
+    seq = seq + params["pos_embed"][None, :, :]
+    seq = constrain(seq, "dp", None, None)
+    seq = _transformer_pool(params, seq, cfg)
+    b = hist.shape[0]
+
+    # single-hot profile fields: one fused gather over the concatenated table
+    prof_ids = batch["profile_ids"] + (
+        jnp.arange(cfg.n_profile_fields) * cfg.profile_vocab)[None, :]
+    prof = jnp.take(params["profile_embed"], prof_ids, axis=0)  # (B, F, D)
+
+    # multi-hot fields through the EmbeddingBag
+    bags = []
+    for f in range(cfg.n_multihot_fields):
+        ids = batch["multihot_ids"][:, f]      # (B, L)
+        ids = jnp.where(ids >= 0, ids + f * cfg.multihot_vocab, -1)
+        bags.append(embedding_bag(params["multihot_embed"], ids))
+    bag = jnp.stack(bags, axis=1)              # (B, F2, D)
+
+    return (seq.reshape(b, -1), jnp.concatenate(
+        [prof.reshape(b, -1), bag.reshape(b, -1)], axis=-1))
+
+
+def forward(params, batch, cfg: BSTConfig):
+    """CTR logits (B,)."""
+    seq_r, prof_r = user_tower(params, batch, cfg)
+    x = jnp.concatenate([seq_r, prof_r], axis=-1)
+    x = constrain(x, "dp", None)
+    for i, l in enumerate(params["mlp"]):
+        x = x @ l["w"] + l["b"]
+        if i < len(params["mlp"]) - 1:
+            x = jax.nn.leaky_relu(x, 0.1)
+    return x[:, 0]
+
+
+def loss_fn(params, batch, cfg: BSTConfig):
+    logits = forward(params, batch, cfg)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    auc_proxy = jnp.mean((logits > 0) == (y > 0.5))
+    return loss, {"acc": auc_proxy}
+
+
+def retrieval_step(params, batch, cfg: BSTConfig, top_k: int = 100):
+    """Score one user against `n_candidates` items: pooled user vector from
+    the behavior sequence, batched dot against candidate embeddings, top-k.
+    batch["candidates"]: (B, N_cand) item ids."""
+    seq_r, _ = user_tower(params, batch, cfg)
+    b = seq_r.shape[0]
+    d = cfg.embed_dim
+    u = seq_r.reshape(b, cfg.seq_len + 1, d).mean(axis=1)   # (B, D)
+    cand = jnp.take(params["item_embed"], batch["candidates"], axis=0)
+    scores = jnp.einsum("bd,bnd->bn", u, cand)
+    vals, idx = jax.lax.top_k(scores, top_k)
+    return vals, jnp.take_along_axis(batch["candidates"], idx, axis=1)

@@ -1,0 +1,544 @@
+"""Decoder-only LM substrate: GQA + RoPE + SwiGLU, optional fine-grained MoE
+(shared + routed experts, top-k), layer-stacked `lax.scan` with remat,
+flash-pattern chunked attention, chunked cross-entropy, KV-cache serving.
+
+Sharding (logical; bound by the launcher through runtime.meshctx):
+  params     — 2D FSDP x TP ("fsdp" on the d_model-ish dim, "tp" on
+               heads / d_ff / vocab / experts)
+  activations— batch on "dp", residual stream sequence-sharded on "sp"
+               (Megatron-style sequence parallelism), attention heads on "tp"
+  KV cache   — batch on "dp", cache sequence on "sp" ("ep_all" for the
+               single-sequence long_500k cell: context-parallel decode)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.nn.core import (dense_init, embed_init, rms_norm, rope,
+                           cross_entropy_chunked)
+from repro.kernels.ref import flash_attention_ref, mha_ref
+from repro.runtime.meshctx import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 1
+    capacity_factor: float = 1.25
+    # "global": one cross-shard dispatch sort (paper-faithful naive EP);
+    # "local": shard-local sort in GSPMD (refuted — see EXPERIMENTS §Perf);
+    # "shard_map": manually-partitioned dispatch — local sort, local gather,
+    #              local expert FFN, one psum over "model" (§Perf winner)
+    dispatch: str = "global"
+    dp_shards: int = 1         # static data-shard count for local dispatch
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                      # 0 -> d_model // n_heads
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 500_000.0
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    remat: bool = True
+    attn_block_kv: int = 512
+    loss_chunks: int = 8
+    seq_shard: bool = True               # sequence-parallel residual stream
+    # §Perf knobs (hillclimbing — see EXPERIMENTS.md):
+    remat_attn: bool = False     # checkpoint the flash scan (recompute in bwd)
+    remat_loss: bool = False     # checkpoint per-chunk CE logits
+    opt_moment_dtype: Any = jnp.float32  # bf16 halves optimizer HBM
+    scan_unroll: int = 1         # roofline tooling: inline the layer scan
+    fsdp: bool = True            # False: TP-only params (no per-layer
+                                 # weight all-gathers; fits <=13B dense)
+
+    @property
+    def head_dim(self):
+        return self.d_head or self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        d, dh = self.d_model, self.head_dim
+        attn = d * (self.n_heads * dh) * 2 + d * (self.n_kv_heads * dh) * 2
+        if self.moe:
+            ffn = (self.moe.n_experts + self.moe.n_shared) * 3 * d * self.d_ff
+            ffn += d * self.moe.n_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        return (self.n_layers * (attn + ffn + 2 * d)
+                + 2 * self.vocab * d + d)
+
+    def n_active_params(self) -> int:
+        if not self.moe:
+            return self.n_params()
+        d, dh = self.d_model, self.head_dim
+        attn = d * (self.n_heads * dh) * 2 + d * (self.n_kv_heads * dh) * 2
+        ffn = (self.moe.top_k + self.moe.n_shared) * 3 * d * self.d_ff
+        ffn += d * self.moe.n_experts
+        return (self.n_layers * (attn + ffn + 2 * d)
+                + 2 * self.vocab * d + d)
+
+
+# --- params ------------------------------------------------------------------
+
+
+def init_params(key, cfg: LMConfig):
+    d, dh = cfg.d_model, cfg.head_dim
+    L = cfg.n_layers
+    keys = jax.random.split(key, 16)
+    dt = cfg.param_dtype
+
+    def stack(k, *shape):
+        fan_in = shape[-2]
+        return dense_init(k, int(np.prod(shape[:-1])), shape[-1],
+                          dt, scale=1.0 / np.sqrt(fan_in)).reshape(shape)
+
+    layers = {
+        "ln1": jnp.ones((L, d), dt),
+        "ln2": jnp.ones((L, d), dt),
+        "wq": stack(keys[0], L, d, cfg.n_heads * dh),
+        "wk": stack(keys[1], L, d, cfg.n_kv_heads * dh),
+        "wv": stack(keys[2], L, d, cfg.n_kv_heads * dh),
+        "wo": stack(keys[3], L, cfg.n_heads * dh, d),
+    }
+    if cfg.moe:
+        e, f = cfg.moe.n_experts, cfg.d_ff
+        layers.update({
+            "router": stack(keys[4], L, d, e),
+            "we_gate": stack(keys[5], L, e, d, f),
+            "we_up": stack(keys[6], L, e, d, f),
+            "we_down": stack(keys[7], L, e, f, d),
+            "ws_gate": stack(keys[8], L, d, cfg.moe.n_shared * f),
+            "ws_up": stack(keys[9], L, d, cfg.moe.n_shared * f),
+            "ws_down": stack(keys[10], L, cfg.moe.n_shared * f, d),
+        })
+    else:
+        layers.update({
+            "w_gate": stack(keys[4], L, d, cfg.d_ff),
+            "w_up": stack(keys[5], L, d, cfg.d_ff),
+            "w_down": stack(keys[6], L, cfg.d_ff, d),
+        })
+    return {
+        "embed": embed_init(keys[11], cfg.vocab, d, dt),
+        "layers": layers,
+        "ln_f": jnp.ones((d,), dt),
+        "unembed": dense_init(keys[12], d, cfg.vocab, dt),
+    }
+
+
+def param_logical_specs(cfg: LMConfig):
+    """Logical PartitionSpec tree matching init_params' structure.  Stacked
+    layer params carry a leading None for the scan dim.  cfg.fsdp=False
+    drops the data-axis parameter sharding (§Perf: no weight all-gathers)."""
+    layers = {
+        "ln1": (None, None), "ln2": (None, None),
+        "wq": (None, "fsdp", "tp"),
+        "wk": (None, "fsdp", "tp"),
+        "wv": (None, "fsdp", "tp"),
+        "wo": (None, "tp", "fsdp"),
+    }
+    if cfg.moe:
+        layers.update({
+            "router": (None, "fsdp", None),
+            "we_gate": (None, "tp", "fsdp", None),
+            "we_up": (None, "tp", "fsdp", None),
+            "we_down": (None, "tp", None, "fsdp"),
+            "ws_gate": (None, "fsdp", "tp"),
+            "ws_up": (None, "fsdp", "tp"),
+            "ws_down": (None, "tp", "fsdp"),
+        })
+    else:
+        layers.update({
+            "w_gate": (None, "fsdp", "tp"),
+            "w_up": (None, "fsdp", "tp"),
+            "w_down": (None, "tp", "fsdp"),
+        })
+    tree = {
+        "embed": ("tp", "fsdp"),
+        "layers": layers,
+        "ln_f": (None,),
+        "unembed": ("fsdp", "tp"),
+    }
+    if not cfg.fsdp:
+        import jax
+        tree = jax.tree.map(
+            lambda spec: tuple(None if a == "fsdp" else a for a in spec),
+            tree, is_leaf=lambda x: isinstance(x, tuple))
+    return tree
+
+
+# --- attention ---------------------------------------------------------------
+
+
+def _attention(x, lp, cfg: LMConfig, positions, kv=None, cache_len=None):
+    """x: (B, S, D).  Training/prefill when kv is None (causal flash);
+    decode when kv=(k_cache, v_cache) with valid length `cache_len` —
+    new k/v are already written into the cache by the caller."""
+    b, s, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cdt = cfg.compute_dtype
+    q = (x @ lp["wq"].astype(cdt)).reshape(b, s, h, dh)
+    kx = (x @ lp["wk"].astype(cdt)).reshape(b, s, hkv, dh)
+    vx = (x @ lp["wv"].astype(cdt)).reshape(b, s, hkv, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    kx = rope(kx, positions, cfg.rope_theta)
+    q = constrain(q.swapaxes(1, 2), "dp", "tp", None, None)    # (B,H,S,dh)
+    kx = kx.swapaxes(1, 2)
+    vx = vx.swapaxes(1, 2)
+
+    if kv is None:
+        blk = min(cfg.attn_block_kv, s)
+        attn = partial(flash_attention_ref, causal=True, block_kv=blk)
+        if cfg.remat_attn:
+            attn = jax.checkpoint(attn)
+        o = attn(q, kx, vx)
+        new_kv = (kx, vx)
+    else:
+        k_cache, v_cache = kv   # (B, Hkv, S_max, dh), pre-updated
+        s_max = k_cache.shape[2]
+        group = h // hkv
+        kk = jnp.repeat(k_cache, group, axis=1).astype(jnp.float32)
+        vv = jnp.repeat(v_cache, group, axis=1).astype(jnp.float32)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk)
+        scores = scores / math.sqrt(dh)
+        valid = jnp.arange(s_max)[None, None, None, :] < cache_len
+        scores = jnp.where(valid, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", w, vv).astype(cdt)
+        new_kv = kv
+    o = o.swapaxes(1, 2).reshape(b, s, h * dh)
+    return o @ lp["wo"].astype(cdt), new_kv
+
+
+# --- MoE ---------------------------------------------------------------------
+
+
+def _expert_ffn(xg, lp, cdt):
+    """xg: (E, C, D) -> (E, C, D) through per-expert SwiGLU."""
+    hg = jnp.einsum("ecd,edf->ecf", xg, lp["we_gate"].astype(cdt))
+    hu = jnp.einsum("ecd,edf->ecf", xg, lp["we_up"].astype(cdt))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(hg) * hu,
+                      lp["we_down"].astype(cdt))
+
+
+def _dispatch_tables(topi, topv, T, E, C):
+    """Capacity-bounded dispatch: token slots sorted by expert, ranked by
+    stable position; returns (table, wtab) of shape (E*C,) where table holds
+    source-token ids (T = padding sentinel)."""
+    k = topi.shape[-1]
+    ef = topi.reshape(-1)
+    tok = jnp.broadcast_to(jnp.arange(T)[:, None], (T, k)).reshape(-1)
+    w = topv.reshape(-1)
+    order = jnp.argsort(ef, stable=True)
+    es, toks, ws = ef[order], tok[order], w[order]
+    pos = jnp.arange(T * k) - jnp.searchsorted(es, es, side="left")
+    slot = jnp.where(pos < C, es * C + pos, E * C)
+    table = jnp.full((E * C,), T, jnp.int32).at[slot].set(
+        toks.astype(jnp.int32), mode="drop")
+    wtab = jnp.zeros((E * C,), jnp.float32).at[slot].set(ws, mode="drop")
+    return table, wtab
+
+
+def _moe_ffn(x2d, lp, cfg: LMConfig):
+    """x2d: (T, D).  Returns (out, aux_loss).  Global dispatch: one sort over
+    all T*k slots (GSPMD turns this into a cross-shard sort — the §Perf
+    baseline); dispatch="local" resorts per data shard, see _moe_ffn_local."""
+    mcfg = cfg.moe
+    T, d = x2d.shape
+    E, k = mcfg.n_experts, mcfg.top_k
+    cdt = cfg.compute_dtype
+    logits = (x2d.astype(jnp.float32) @ lp["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = lax.top_k(probs, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    C = max(int(math.ceil(T * k / E * mcfg.capacity_factor)), 1)
+    table, wtab = _dispatch_tables(topi, topv, T, E, C)
+    # keep the (E, C, ...) layout end-to-end so the expert dim stays
+    # tp-sharded through gather -> FFN -> scatter (reshaping it away forces
+    # GSPMD to replicate the slot buffers)
+    table = constrain(table.reshape(E, C), "tp", None)
+    wtab = wtab.reshape(E, C)
+    xp = jnp.concatenate([x2d, jnp.zeros((1, d), x2d.dtype)], axis=0)
+    xg = constrain(xp[table], "tp", None, None)           # (E, C, d)
+    out_slots = _expert_ffn(xg, lp, cdt) * wtab[..., None].astype(cdt)
+    y = jnp.zeros((T + 1, d), cdt).at[table].add(out_slots)[:T]
+
+    # shared experts (always-on dense branch)
+    hs = jax.nn.silu(x2d @ lp["ws_gate"].astype(cdt)) * \
+        (x2d @ lp["ws_up"].astype(cdt))
+    y = y + hs @ lp["ws_down"].astype(cdt)
+
+    # switch-style load-balance aux
+    counts = jnp.zeros((E,), jnp.float32).at[topi.reshape(-1)].add(1.0)
+    f = counts / (T * k)
+    p_mean = probs.mean(axis=0)
+    aux = E * jnp.sum(f * p_mean)
+    return y, aux
+
+
+def _moe_ffn_local(x2d, lp, cfg: LMConfig):
+    """Shard-local dispatch (§Perf optimisation): tokens are viewed as
+    (dp_shards, T_local) so sort/rank/scatter stay shard-local; the only
+    cross-shard traffic is the expert-output reduce that GSPMD already emits
+    for the TP contraction."""
+    mcfg = cfg.moe
+    T, d = x2d.shape
+    dp = mcfg.dp_shards
+    E, k = mcfg.n_experts, mcfg.top_k
+    cdt = cfg.compute_dtype
+    Tl = T // dp
+    # pin the shard-local view: leading dim on "dp", everything else local
+    # (the (B,S,D)->(T,D) reshape otherwise inherits the sp-sharded S and
+    # GSPMD falls back to full rematerialisation of the scatter)
+    xl = constrain(x2d.reshape(dp, Tl, d), "dp", None, None)
+    logits = xl.astype(jnp.float32) @ lp["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = lax.top_k(probs, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    C = max(int(math.ceil(Tl * k / E * mcfg.capacity_factor)), 1)
+    tables, wtabs = jax.vmap(
+        partial(_dispatch_tables, T=Tl, E=E, C=C))(topi, topv)
+    xp = jnp.concatenate([xl, jnp.zeros((dp, 1, d), x2d.dtype)], axis=1)
+    xg = jnp.take_along_axis(
+        xp, tables[:, :, None], axis=1).reshape(dp, E, C, d)
+    xg = constrain(xg, "dp", "tp", None, None)
+    out = jax.vmap(lambda g: _expert_ffn(g, lp, cdt))(xg)
+    out = out.reshape(dp, E * C, d) * wtabs[..., None].astype(cdt)
+    y = jnp.zeros((dp, Tl + 1, d), cdt).at[
+        jnp.arange(dp)[:, None], tables].add(out)[:, :Tl]
+    # NOTE (§Perf, refuted-hypothesis record): this shard-local dispatch
+    # removes the cross-shard dispatch sort (all-to-all -82%) but GSPMD's
+    # scatter partitioner replicates the batched combine, growing
+    # all-reduce + temp.  Localising it fully needs shard_map around the
+    # MoE interior — documented future work in EXPERIMENTS.md.
+    y = y.reshape(T, d)
+
+    hs = jax.nn.silu(x2d @ lp["ws_gate"].astype(cdt)) * \
+        (x2d @ lp["ws_up"].astype(cdt))
+    y = y + hs @ lp["ws_down"].astype(cdt)
+
+    counts = jax.vmap(lambda ti: jnp.zeros((E,), jnp.float32)
+                      .at[ti.reshape(-1)].add(1.0))(topi).sum(0)
+    f = counts / (T * k)
+    p_mean = probs.reshape(T, E).mean(axis=0)
+    aux = E * jnp.sum(f * p_mean)
+    return y, aux
+
+
+def _moe_ffn_shardmap(x2d, lp, cfg: LMConfig):
+    """Manually-partitioned routed-expert path: every (data i, model j)
+    device sorts ITS tokens, gathers ITS experts' slots from its local
+    token block (x replicated over "model" within a data row), runs the
+    expert FFN locally and contributes via ONE psum over "model" — no
+    cross-shard sort, no GSPMD scatter guessing.  Shared experts and the
+    aux loss stay in GSPMD land (tiny).  Falls back to the global path
+    when no mesh is bound (unit tests)."""
+    from repro.runtime.meshctx import get_current_mesh
+    from jax.sharding import PartitionSpec as P
+    mesh = get_current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return _moe_ffn(x2d, lp, cfg)
+    mcfg = cfg.moe
+    T, d = x2d.shape
+    E, k = mcfg.n_experts, mcfg.top_k
+    cdt = cfg.compute_dtype
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_total = 1
+    for a in dp_axes:
+        dp_total *= mesh.shape[a]
+    tp = mesh.shape["model"]
+    e_loc = E // tp
+    t_loc = T // dp_total
+    C = max(int(math.ceil(t_loc * k / E * mcfg.capacity_factor)), 1)
+
+    def inner(x_loc, router, wg, wu, wd):
+        # x_loc (t_loc, d); router (d, E); w* (e_loc, d, f)
+        j = lax.axis_index("model")
+        logits = x_loc.astype(jnp.float32) @ router.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        topv, topi = lax.top_k(probs, k)
+        topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+        table, wtab = _dispatch_tables(topi, topv, t_loc, E, C)
+        tbl = lax.dynamic_slice_in_dim(table.reshape(E, C), j * e_loc,
+                                       e_loc, axis=0)
+        wt = lax.dynamic_slice_in_dim(wtab.reshape(E, C), j * e_loc,
+                                      e_loc, axis=0)
+        xp = jnp.concatenate([x_loc, jnp.zeros((1, d), x_loc.dtype)], axis=0)
+        xg = xp[tbl]                                   # (e_loc, C, d) local
+        hg = jnp.einsum("ecd,edf->ecf", xg, wg.astype(cdt))
+        hu = jnp.einsum("ecd,edf->ecf", xg, wu.astype(cdt))
+        out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hg) * hu,
+                         wd.astype(cdt))
+        out = out * wt[..., None].astype(cdt)
+        y = jnp.zeros((t_loc + 1, d), cdt).at[tbl].add(out)[:t_loc]
+        y = lax.psum(y, "model")                       # combine experts
+        counts = jnp.zeros((E,), jnp.float32).at[topi.reshape(-1)].add(1.0)
+        return y, lax.psum(counts / tp, "model"), \
+            lax.psum(probs.sum(0) / tp, "model")
+
+    dspec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
+    y, counts, psum = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(dspec[0], None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(dspec[0], None), P(dspec[0]), P(dspec[0])),
+        check_vma=False,
+    )(x2d, lp["router"], lp["we_gate"], lp["we_up"], lp["we_down"])
+
+    # shared experts + aux loss in GSPMD land
+    hs = jax.nn.silu(x2d @ lp["ws_gate"].astype(cdt)) * \
+        (x2d @ lp["ws_up"].astype(cdt))
+    y = y + hs @ lp["ws_down"].astype(cdt)
+    # counts/psum are per-data-shard partials stacked on the dp axis
+    f = counts.reshape(dp_total, E).sum(0) / (T * k)
+    p_mean = psum.reshape(dp_total, E).sum(0) / T
+    aux = E * jnp.sum(f * p_mean)
+    return y, aux
+
+
+# --- blocks ------------------------------------------------------------------
+
+
+_MOE_DISPATCH = {"global": _moe_ffn, "local": _moe_ffn_local,
+                 "shard_map": _moe_ffn_shardmap}
+
+
+def _ffn(x, lp, cfg: LMConfig):
+    b, s, d = x.shape
+    if cfg.moe is None:
+        cdt = cfg.compute_dtype
+        h = jax.nn.silu(x @ lp["w_gate"].astype(cdt)) * \
+            (x @ lp["w_up"].astype(cdt))
+        return h @ lp["w_down"].astype(cdt), jnp.float32(0.0)
+    fn = _MOE_DISPATCH[cfg.moe.dispatch]
+    y, aux = fn(x.reshape(b * s, d), lp, cfg)
+    return y.reshape(b, s, d), aux
+
+
+def _layer(x, lp, cfg: LMConfig, positions):
+    x = constrain(x, "dp", "sp", None)
+    a, _ = _attention(rms_norm(x, lp["ln1"]), lp, cfg, positions)
+    x = x + a
+    x = constrain(x, "dp", "sp", None)
+    f, aux = _ffn(rms_norm(x, lp["ln2"]), lp, cfg)
+    return x + f, aux
+
+
+def forward(params, tokens, cfg: LMConfig):
+    """tokens: (B, S) -> hidden states (B, S, D) after final norm."""
+    cdt = cfg.compute_dtype
+    x = params["embed"].astype(cdt)[tokens]
+    x = constrain(x, "dp", "sp", None)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+
+    def body(carry, lp):
+        y, aux = _layer(carry, lp, cfg, positions)
+        return y, aux
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, auxs = lax.scan(body_fn, x, params["layers"],
+                       unroll=cfg.scan_unroll)
+    return rms_norm(x, params["ln_f"]), auxs.mean()
+
+
+def loss_fn(params, batch, cfg: LMConfig, aux_weight: float = 0.01):
+    h, aux = forward(params, batch["tokens"], cfg)
+    ce_fn = partial(cross_entropy_chunked, n_chunks=cfg.loss_chunks)
+    if cfg.remat_loss:
+        ce_fn = jax.checkpoint(ce_fn, static_argnums=())
+    ce = ce_fn(h, params["unembed"].astype(cfg.compute_dtype),
+               batch["labels"])
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# --- serving -----------------------------------------------------------------
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int,
+                  dtype=None):
+    dt = dtype or cfg.compute_dtype
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "length": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, tokens, cfg: LMConfig, max_len: int | None = None):
+    """Run the causal forward over the prompt, return (last-token logits,
+    populated KV cache)."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    cdt = cfg.compute_dtype
+    x = params["embed"].astype(cdt)[tokens]
+    positions = jnp.broadcast_to(jnp.arange(s), tokens.shape)
+
+    def body(carry, lp):
+        xx = constrain(carry, "dp", "sp", None)
+        a, (kx, vx) = _attention(rms_norm(xx, lp["ln1"]), lp, cfg, positions)
+        xx = xx + a
+        f, aux = _ffn(rms_norm(xx, lp["ln2"]), lp, cfg)
+        return xx + f, (kx, vx)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (ks, vs) = lax.scan(body_fn, x, params["layers"],
+                           unroll=cfg.scan_unroll)
+    h = rms_norm(x, params["ln_f"])
+    logits = h[:, -1] @ params["unembed"].astype(cdt)
+    pad = max_len - s
+    if pad:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    cache = {"k": ks, "v": vs, "length": jnp.int32(s)}
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: LMConfig):
+    """One decoding step.  tokens: (B, 1) newest ids; cache length tracks the
+    write position.  Returns (logits (B, V), new cache)."""
+    cdt = cfg.compute_dtype
+    b = tokens.shape[0]
+    pos = cache["length"]
+    x = params["embed"].astype(cdt)[tokens]          # (B, 1, D)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    def body(carry, layer_in):
+        lp, kc, vc = layer_in
+        xx = carry
+        h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        xn = rms_norm(xx, lp["ln1"])
+        kx = (xn @ lp["wk"].astype(cdt)).reshape(b, 1, hkv, dh)
+        vx = (xn @ lp["wv"].astype(cdt)).reshape(b, 1, hkv, dh)
+        kx = rope(kx, positions, cfg.rope_theta).swapaxes(1, 2)
+        vx = vx.swapaxes(1, 2)
+        kc = lax.dynamic_update_slice_in_dim(kc, kx.astype(kc.dtype), pos,
+                                             axis=2)
+        vc = lax.dynamic_update_slice_in_dim(vc, vx.astype(vc.dtype), pos,
+                                             axis=2)
+        a, _ = _attention(xn, lp, cfg, positions, kv=(kc, vc),
+                          cache_len=pos + 1)
+        xx = xx + a
+        f, _ = _ffn(rms_norm(xx, lp["ln2"]), lp, cfg)
+        return xx + f, (kc, vc)
+
+    x, (ks, vs) = lax.scan(body, x, (params["layers"], cache["k"],
+                                     cache["v"]), unroll=cfg.scan_unroll)
+    h = rms_norm(x, params["ln_f"])
+    logits = h[:, 0] @ params["unembed"].astype(cdt)
+    return logits, {"k": ks, "v": vs, "length": pos + 1}

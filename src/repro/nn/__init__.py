@@ -1,0 +1,2 @@
+from .core import (dense_init, embed_init, rms_norm, rope, swiglu,
+                   cross_entropy_chunked, Param)

@@ -1,0 +1,78 @@
+"""Minimal functional NN substrate (no flax): params are plain pytrees of
+arrays; every layer is an (init, apply) pair of pure functions."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+Param = Any  # a pytree of jnp arrays
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32,
+               scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2, 2, (in_dim, out_dim),
+                                        jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.truncated_normal(key, -2, 2, (vocab, dim),
+                                        jnp.float32)).astype(dtype)
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta: float = 500_000.0):
+    """Rotary embedding.  x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def cross_entropy_chunked(h, unembed, labels, n_chunks: int = 8,
+                          logit_dtype=jnp.float32):
+    """Token-mean cross entropy without materialising (B, S, V) at once:
+    scan over sequence chunks — the (chunk, V) logits live only inside one
+    scan step (with remat this bounds the train-step live set by V/chunks).
+
+    h: (B, S, D); unembed: (D, V); labels: (B, S) int; label<0 = padding.
+    """
+    b, s, dm = h.shape
+    if s % n_chunks:
+        n_chunks = 1
+    cs = s // n_chunks
+    hc = h.reshape(b, n_chunks, cs, dm).swapaxes(0, 1)      # (n, B, cs, D)
+    lc = labels.reshape(b, n_chunks, cs).swapaxes(0, 1)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hh, ll = xs
+        logits = (hh.astype(logit_dtype) @ unembed.astype(logit_dtype))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.clip(ll, 0)[..., None], axis=-1)[..., 0]
+        valid = ll >= 0
+        nll = jnp.where(valid, lse - gold, 0.0)
+        return (tot + nll.sum(), cnt + valid.sum()), None
+
+    (tot, cnt), _ = lax.scan(body, (jnp.float32(0.0), jnp.int32(0)), (hc, lc))
+    return tot / jnp.maximum(cnt, 1)

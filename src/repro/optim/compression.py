@@ -1,0 +1,72 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization
+tricks at 1000+ node scale).
+
+Two codecs, both with error feedback (Karimireddy et al., "EF-SGD"):
+  * top-k sparsification — keep the k largest-magnitude entries per tensor;
+  * int8 quantization — per-tensor symmetric scale.
+
+At multi-pod scale the DCN (inter-pod) all-reduce is the scarce resource;
+the launcher applies the codec to the *pod-axis* reduction only (intra-pod
+ICI reductions stay exact), which is how production systems deploy these.
+The codecs are pure functions so they compose with jit/shard_map, and the
+error-feedback residual lives in the optimizer state pytree (sharded like
+the grads)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: object  # pytree like grads
+
+
+def topk_compress_decompress(g: jax.Array, frac: float = 0.01):
+    """Simulate top-k sparsify->reduce->densify on one tensor; returns the
+    densified tensor (entries below the magnitude cutoff zeroed) and the
+    fraction of L2 mass kept.  k = max(1, frac * size)."""
+    flat = g.ravel().astype(jnp.float32)
+    k = max(1, int(frac * flat.size))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
+    mass = jnp.sum(kept * kept) / jnp.maximum(jnp.sum(flat * flat), 1e-20)
+    return kept.reshape(g.shape).astype(g.dtype), mass
+
+
+def int8_compress_decompress(g: jax.Array):
+    """Per-tensor symmetric int8 quantize->dequantize round trip."""
+    flat = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(flat)), 1e-20) / 127.0
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return (q.astype(jnp.float32) * scale).astype(g.dtype)
+
+
+def compressed_gradients(grads, ef: ErrorFeedbackState | None,
+                         codec: str = "int8", topk_frac: float = 0.01):
+    """Apply codec with error feedback across a grad pytree.
+
+    Returns (compressed_grads, new_ef).  The compressed grads are what the
+    cross-pod all-reduce would carry; the residual (what compression dropped)
+    is replayed into the next step's grads, preserving convergence."""
+    if ef is None:
+        ef = ErrorFeedbackState(jax.tree.map(
+            lambda g: jnp.zeros_like(g, dtype=jnp.float32), grads))
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        if codec == "int8":
+            out = int8_compress_decompress(corrected)
+        elif codec == "topk":
+            out, _ = topk_compress_decompress(corrected, topk_frac)
+        else:
+            raise ValueError(codec)
+        return out.astype(g.dtype), corrected - out.astype(jnp.float32)
+
+    pairs = jax.tree.map(one, grads, ef.residual)
+    comp = jax.tree.map(lambda t: t[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda t: t[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return comp, ErrorFeedbackState(resid)

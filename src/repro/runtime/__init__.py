@@ -1,0 +1,2 @@
+from .meshctx import (set_current_mesh, get_current_mesh, constrain,
+                      logical_to_spec, use_mesh, LOGICAL_AXES)

@@ -1,0 +1,78 @@
+"""Logical-axis sharding context.
+
+Model code annotates tensors with *logical* axes ("dp", "tp", "fsdp", "sp");
+the launcher binds a physical mesh and this module translates logical ->
+physical PartitionSpecs, dropping axes the mesh does not have.  With no mesh
+bound (unit tests, single-device smoke runs) every constraint is a no-op, so
+model code never branches on topology.
+
+Logical axes:
+  dp   — batch/data parallel  -> ("pod", "data") when present
+  fsdp — parameter sharding   -> ("data",)
+  tp   — tensor/expert/vocab  -> ("model",)
+  sp   — sequence parallel    -> ("model",)   (same physical axis as tp)
+  ep_all — maximal sharding   -> ("pod", "data", "model") (long-context KV)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LOGICAL_AXES = {
+    "dp": ("pod", "data"),
+    "fsdp": ("data",),
+    "tp": ("model",),
+    "sp": ("model",),
+    "ep_all": ("pod", "data", "model"),
+}
+
+_state = threading.local()
+
+
+def set_current_mesh(mesh: Mesh | None):
+    _state.mesh = mesh
+
+
+def get_current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None):
+    prev = get_current_mesh()
+    set_current_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_current_mesh(prev)
+
+
+def logical_to_spec(logical, mesh: Mesh) -> P:
+    """Translate a tuple of logical axis names (or None) to a PartitionSpec
+    for `mesh`, dropping physical axes the mesh lacks."""
+    names = set(mesh.axis_names)
+    out = []
+    for l in logical:
+        if l is None:
+            out.append(None)
+            continue
+        phys = tuple(a for a in LOGICAL_AXES[l] if a in names)
+        if not phys:
+            out.append(None)
+        elif len(phys) == 1:
+            out.append(phys[0])
+        else:
+            out.append(phys)
+    return P(*out)
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint by logical axes; no-op without a bound mesh."""
+    mesh = get_current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,114 @@
+"""Pure-numpy oracles for the DPC core (brute-force reference semantics)."""
+from __future__ import annotations
+
+import numpy as np
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.steepest import neighbor_offsets  # noqa: E402
+
+
+def grid_neighbors(shape, connectivity):
+    """Yield (flat_v, flat_u) directed neighbor pairs of a structured grid."""
+    offs = neighbor_offsets(len(shape), connectivity)
+    idx = np.arange(int(np.prod(shape))).reshape(shape)
+    pairs = []
+    for off in offs:
+        src_sl, dst_sl = [], []
+        for o, s in zip(off, shape):
+            if o >= 0:
+                src_sl.append(slice(0, s - o))
+                dst_sl.append(slice(o, s))
+            else:
+                src_sl.append(slice(-o, s))
+                dst_sl.append(slice(0, s + o))
+        pairs.append((idx[tuple(src_sl)].ravel(), idx[tuple(dst_sl)].ravel()))
+    send = np.concatenate([p[0] for p in pairs])
+    recv = np.concatenate([p[1] for p in pairs])
+    return send, recv
+
+
+def oracle_manifold(order, connectivity=6, descending=True):
+    """Follow the steepest path vertex-by-vertex (paper §3.3 definition)."""
+    shape = order.shape
+    flat = order.ravel().astype(np.int64)
+    n = flat.size
+    send, recv = grid_neighbors(shape, connectivity)
+    # adjacency list
+    neigh = [[] for _ in range(n)]
+    for s, r in zip(send, recv):
+        neigh[s].append(r)
+    key = flat if descending else -flat
+    target = np.empty(n, dtype=np.int64)
+    for v in range(n):
+        best, bestk = v, key[v]
+        for u in neigh[v]:
+            if key[u] > bestk:
+                best, bestk = u, key[u]
+        target[v] = best
+    # follow to fixpoint
+    out = np.arange(n)
+    for v in range(n):
+        cur = v
+        while target[cur] != cur:
+            cur = target[cur]
+        out[v] = cur
+    return out.reshape(shape)
+
+
+def oracle_components(mask, connectivity=6):
+    """BFS connected components of the masked grid; label = max vertex id."""
+    shape = mask.shape
+    flat = mask.ravel().astype(bool)
+    n = flat.size
+    send, recv = grid_neighbors(shape, connectivity)
+    neigh = [[] for _ in range(n)]
+    for s, r in zip(send, recv):
+        if flat[s] and flat[r]:
+            neigh[s].append(r)
+    labels = np.full(n, -1, dtype=np.int64)
+    seen = np.zeros(n, dtype=bool)
+    for v in range(n):
+        if not flat[v] or seen[v]:
+            continue
+        stack, comp = [v], [v]
+        seen[v] = True
+        while stack:
+            x = stack.pop()
+            for u in neigh[x]:
+                if not seen[u]:
+                    seen[u] = True
+                    stack.append(u)
+                    comp.append(u)
+        m = max(comp)
+        for u in comp:
+            labels[u] = m
+    return labels.reshape(shape)
+
+
+def oracle_components_graph(mask, senders, receivers):
+    n = len(mask)
+    neigh = [[] for _ in range(n)]
+    for s, r in zip(senders, receivers):
+        if mask[s] and mask[r]:
+            neigh[s].append(r)
+            neigh[r].append(s)
+    labels = np.full(n, -1, dtype=np.int64)
+    seen = np.zeros(n, dtype=bool)
+    for v in range(n):
+        if not mask[v] or seen[v]:
+            continue
+        stack, comp = [v], [v]
+        seen[v] = True
+        while stack:
+            x = stack.pop()
+            for u in neigh[x]:
+                if not seen[u]:
+                    seen[u] = True
+                    stack.append(u)
+                    comp.append(u)
+        m = max(comp)
+        for u in comp:
+            labels[u] = m
+    return labels

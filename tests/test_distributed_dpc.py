@@ -1,0 +1,117 @@
+"""Distributed DPC (Alg. 1 + 2 under shard_map) == single-device labels.
+
+Runs in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+so the main test process keeps its single-device view (the dry-run rule:
+never set the flag globally).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+_WORKER = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (make_dpc_mesh, distributed_manifold,
+                            distributed_connected_components,
+                            descending_manifold, ascending_manifold,
+                            connected_components_grid, compute_order)
+    from repro.data import perlin_noise
+
+    assert len(jax.devices()) == 8
+
+    failures = []
+
+    def check_manifold(shape, conn, seed, n_shards):
+        rng = np.random.default_rng(seed)
+        order = compute_order(jnp.asarray(rng.standard_normal(shape)))
+        mesh = make_dpc_mesh(n_shards)
+        for descending in (True, False):
+            got, stats = distributed_manifold(order, mesh, conn, descending)
+            ref, _ = (descending_manifold if descending else
+                      ascending_manifold)(order, conn)
+            ok = (np.asarray(got).ravel() == np.asarray(ref).ravel()).all()
+            if not ok:
+                failures.append(("manifold", shape, conn, seed, n_shards,
+                                 descending))
+
+    def check_cc(shape, conn, seed, n_shards, p):
+        rng = np.random.default_rng(seed)
+        mask = jnp.asarray(rng.random(shape) < p)
+        mesh = make_dpc_mesh(n_shards)
+        got, stats = distributed_connected_components(mask, mesh, conn)
+        ref = connected_components_grid(mask, conn)
+        ok = (np.asarray(got) == np.asarray(ref.labels)).all()
+        if not ok:
+            failures.append(("cc", shape, conn, seed, n_shards, p))
+
+    # MS manifolds: 2D + 3D, both connectivities, shard counts incl Xl=1
+    for n_shards in (2, 4, 8):
+        check_manifold((16, 11), 4, 0, n_shards)
+        check_manifold((16, 11), 6, 1, n_shards)
+        check_manifold((8, 7, 6), 6, 2, n_shards)
+        check_manifold((8, 7, 6), 14, 3, n_shards)
+        check_manifold((8, 13), 4, 4, n_shards)     # Xl == 1 when P == 8
+
+    # Perlin field (the paper's dataset)
+    field = perlin_noise((16, 12, 10), frequency=0.2, seed=5)
+    order = compute_order(jnp.asarray(field))
+    mesh = make_dpc_mesh(8)
+    got, stats = distributed_manifold(order, mesh, 6, True)
+    ref, _ = descending_manifold(order, 6)
+    assert (np.asarray(got).ravel() == np.asarray(ref).ravel()).all(), "perlin"
+    assert int(stats.ghost_bytes) == 8 * 2 * 12 * 10 * 4
+
+    # CC: sparse + dense masks, spiral adversarial case
+    for n_shards in (2, 4, 8):
+        for seed, p in ((0, 0.3), (1, 0.55), (2, 0.75), (3, 0.95)):
+            check_cc((16, 11), 4, seed, n_shards, p)
+            check_cc((8, 6, 6), 6, seed + 10, n_shards, p)
+        check_cc((16, 11), 6, 20, n_shards, 0.5)
+        check_cc((8, 6, 6), 14, 21, n_shards, 0.4)
+
+    # spiral that crosses every shard repeatedly (paper Fig. 2 analogue)
+    spiral = np.zeros((16, 16), bool)
+    spiral[0, :] = spiral[:, 15] = True
+    spiral[15, :] = spiral[2:, 0] = True
+    spiral[2, 2:13] = spiral[2:13, 12] = True
+    spiral[12, 2:12] = spiral[4:12, 2] = True
+    spiral[4, 2:10] = True
+    got, _ = distributed_connected_components(jnp.asarray(spiral),
+                                              make_dpc_mesh(8), 4)
+    ref = connected_components_grid(jnp.asarray(spiral), 4)
+    if not (np.asarray(got) == np.asarray(ref.labels)).all():
+        failures.append(("spiral",))
+
+    # §Perf variant: dropping the mask gather must be bit-identical
+    rng = np.random.default_rng(77)
+    mask = jnp.asarray(rng.random((16, 9)) < 0.6)
+    mesh = make_dpc_mesh(8)
+    a, sa = distributed_connected_components(mask, mesh, 4, gather_mask=True)
+    b, sb = distributed_connected_components(mask, mesh, 4, gather_mask=False)
+    if not (np.asarray(a) == np.asarray(b)).all():
+        failures.append(("gather_mask_variant",))
+    assert float(sb.ghost_bytes) < float(sa.ghost_bytes)
+
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("DISTRIBUTED-OK")
+""")
+
+
+@pytest.mark.slow
+def test_distributed_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    proc = subprocess.run([sys.executable, "-c", _WORKER], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "DISTRIBUTED-OK" in proc.stdout

@@ -1,0 +1,31 @@
+"""Dry-run regression: representative cells must lower + compile on the
+production meshes (512 fake host devices, subprocess).  The full 44-cell
+matrix runs via `python -m repro.launch.dryrun`; this keeps CI fast."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+_CELLS = [
+    ("llama3_2_1b", "train_4k", "--single-pod"),
+    ("kimi_k2_1t", "decode_32k", "--multi-pod"),
+    ("gat_cora", "ogb_products", "--single-pod"),
+    ("bst", "retrieval_cand", "--multi-pod"),
+    ("dpc_grid", "cc_512", "--single-pod"),
+]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape,mesh", _CELLS)
+def test_smoke_cell_compiles(arch, shape, mesh, tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(_ROOT, "src"))
+    env.pop("XLA_FLAGS", None)  # dryrun.py sets its own 512-device flag
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--smoke",
+         "--arch", arch, "--shape", shape, mesh, "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900, cwd=_ROOT)
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
+    assert "0 failures" in proc.stdout

@@ -1,0 +1,66 @@
+"""MS segmentation vs the brute-force steepest-path oracle (paper §3.3)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ms_segmentation, ms_segmentation_graph, compute_order,
+                        descending_manifold, ascending_manifold, extrema)
+from repro.data import perlin_noise
+from oracles import oracle_manifold, grid_neighbors
+
+
+@pytest.mark.parametrize("shape,conn", [
+    ((12, 13), 4), ((12, 13), 6),
+    ((7, 8, 9), 6), ((7, 8, 9), 14),
+])
+def test_manifolds_match_oracle(shape, conn):
+    rng = np.random.default_rng(0)
+    order = np.asarray(
+        compute_order(jnp.asarray(rng.standard_normal(shape))))
+    desc, _ = descending_manifold(jnp.asarray(order), conn)
+    asc, _ = ascending_manifold(jnp.asarray(order), conn)
+    np.testing.assert_array_equal(
+        np.asarray(desc).reshape(shape), oracle_manifold(order, conn, True))
+    np.testing.assert_array_equal(
+        np.asarray(asc).reshape(shape), oracle_manifold(order, conn, False))
+
+
+def test_perlin_segmentation():
+    field = perlin_noise((24, 24, 24), frequency=0.15, seed=3)
+    order = compute_order(jnp.asarray(field))
+    seg = ms_segmentation(order, connectivity=6)
+    # segmentation labels are consistent hashes of (desc, asc)
+    n = order.size
+    expect = (np.asarray(seg.descending).astype(np.int32) * n
+              + np.asarray(seg.ascending))
+    np.testing.assert_array_equal(np.asarray(seg.segmentation), expect)
+    # every desc label is a maximum, every asc label a minimum
+    maxima, minima = extrema(order, 6)
+    assert np.asarray(maxima).ravel()[np.unique(np.asarray(seg.descending))].all()
+    assert np.asarray(minima).ravel()[np.unique(np.asarray(seg.ascending))].all()
+
+
+def test_graph_variant_matches_grid():
+    """Unstructured DPC on the grid's edge list == structured DPC."""
+    shape, conn = (9, 10), 6
+    rng = np.random.default_rng(1)
+    order = np.asarray(compute_order(jnp.asarray(rng.standard_normal(shape))))
+    send, recv = grid_neighbors(shape, conn)
+    seg_graph = ms_segmentation_graph(
+        jnp.asarray(order.ravel()), jnp.asarray(send), jnp.asarray(recv))
+    seg_grid = ms_segmentation(jnp.asarray(order), conn)
+    np.testing.assert_array_equal(
+        np.asarray(seg_graph.descending),
+        np.asarray(seg_grid.descending).ravel())
+    np.testing.assert_array_equal(
+        np.asarray(seg_graph.ascending),
+        np.asarray(seg_grid.ascending).ravel())
+
+
+def test_monotone_field_single_segment():
+    order = jnp.arange(5 * 6, dtype=jnp.int32).reshape(5, 6)
+    seg = ms_segmentation(order, connectivity=4)
+    assert np.unique(np.asarray(seg.descending)).size == 1
+    assert np.unique(np.asarray(seg.ascending)).size == 1
+    assert int(np.asarray(seg.descending)[0, 0]) == 5 * 6 - 1
+    assert int(np.asarray(seg.ascending)[0, 0]) == 0

@@ -1,0 +1,86 @@
+"""Unit + property tests for the pointer-doubling primitive."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import path_compress, jump, is_converged
+
+
+def _np_compress(d):
+    d = d.copy()
+    n = len(d)
+    for v in range(n):
+        if d[v] < 0:
+            continue
+        cur = v
+        seen = 0
+        while d[cur] != cur:
+            cur = d[cur]
+            seen += 1
+            assert seen <= n, "cycle"
+        d[v] = cur
+    return d
+
+
+def test_chain():
+    # 0<-1<-2<-...<-9 : everything compresses to 0
+    d = jnp.array([0, 0, 1, 2, 3, 4, 5, 6, 7, 8])
+    out, iters = path_compress(d)
+    assert (np.asarray(out) == 0).all()
+    assert int(iters) <= 5  # log2(10) rounds + convergence check
+
+
+def test_masked_entries_fixed():
+    d = jnp.array([-1, 1, 1, -1, 4, 4])
+    out, _ = path_compress(d)
+    np.testing.assert_array_equal(np.asarray(out), [-1, 1, 1, -1, 4, 4])
+
+
+def test_already_converged():
+    d = jnp.arange(8)
+    out, iters = path_compress(d)
+    np.testing.assert_array_equal(np.asarray(out), np.arange(8))
+    assert int(iters) == 1  # one round to detect the fixpoint
+    assert bool(is_converged(d))
+
+
+@st.composite
+def pointer_forest(draw):
+    """Random functional forest: d[v] >= v points 'up' toward roots;
+    masked (-1) vertices are never pointer targets (the DPC invariant)."""
+    n = draw(st.integers(2, 200))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    masked = rng.random(n) < 0.15
+    live = np.flatnonzero(~masked)
+    d = np.full(n, -1, dtype=np.int64)
+    d[live] = live  # roots by default
+    for i, v in enumerate(live[:-1]):
+        if rng.random() < 0.8:
+            d[v] = rng.choice(live[i + 1:])  # strictly increasing -> acyclic
+    return d
+
+
+@given(pointer_forest())
+@settings(max_examples=50, deadline=None)
+def test_property_matches_sequential(d):
+    out, _ = path_compress(jnp.asarray(d))
+    np.testing.assert_array_equal(np.asarray(out), _np_compress(d))
+
+
+@given(pointer_forest())
+@settings(max_examples=25, deadline=None)
+def test_property_idempotent(d):
+    out, _ = path_compress(jnp.asarray(d))
+    out2, iters2 = path_compress(out)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+    assert int(iters2) == 1
+
+
+def test_log_rounds():
+    # chain of 2**k resolves in ~k+1 rounds — the paper's core scaling claim
+    n = 1024
+    d = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                         jnp.arange(n - 1, dtype=jnp.int32)])
+    _, iters = path_compress(d)
+    assert int(iters) <= 12

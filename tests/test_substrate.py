@@ -1,0 +1,169 @@
+"""Substrate tests: optimizer, checkpoint/restore, fault-tolerant driver,
+gradient compression, data pipelines."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim import (adamw, warmup_cosine, compressed_gradients,
+                         int8_compress_decompress, topk_compress_decompress,
+                         clip_by_global_norm)
+from repro.checkpoint import CheckpointManager, save_pytree, load_pytree
+from repro.runtime.driver import TrainDriver, InjectedFailure
+from repro.data.tokens import TokenStream
+
+
+def _quadratic_setup():
+    target = jnp.asarray(np.random.default_rng(0).standard_normal(8),
+                         dtype=jnp.float32)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    params = {"w": jnp.zeros(8)}
+    return loss, params, target
+
+
+def test_adamw_converges():
+    loss, params, target = _quadratic_setup()
+    opt = adamw(0.1, weight_decay=0.0)
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, m = opt.update(g, state, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_warmup_cosine_shape():
+    fn = warmup_cosine(1.0, 10, 100)
+    assert float(fn(jnp.int32(0))) == 0.0
+    assert abs(float(fn(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(fn(jnp.int32(100))) <= 0.11
+    assert float(fn(jnp.int32(5))) == pytest.approx(0.5)
+
+
+def test_grad_clip():
+    tree = {"a": jnp.ones(4) * 10.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_int8_roundtrip_small_error():
+    g = jnp.asarray(np.random.default_rng(1).standard_normal(1000),
+                    dtype=jnp.float32)
+    out = int8_compress_decompress(g)
+    rel = float(jnp.linalg.norm(out - g) / jnp.linalg.norm(g))
+    assert rel < 0.02
+
+
+def test_topk_keeps_largest():
+    g = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05])
+    out, mass = topk_compress_decompress(g, frac=0.4)
+    np.testing.assert_allclose(np.asarray(out), [0, -5.0, 0, 3.0, 0])
+    assert float(mass) > 0.99
+
+
+def test_error_feedback_conserves_signal():
+    """EF invariant: sum(compressed outputs) + residual == sum(inputs) —
+    nothing the codec drops is ever lost, it is replayed later."""
+    rng = np.random.default_rng(2)
+    ef = None
+    total = jnp.zeros(16)
+    gsum = jnp.zeros(16)
+    for i in range(20):
+        g = {"w": jnp.asarray(rng.standard_normal(16), dtype=jnp.float32)}
+        gsum = gsum + g["w"]
+        comp, ef = compressed_gradients(g, ef, codec="topk", topk_frac=0.25)
+        total = total + comp["w"]
+    np.testing.assert_allclose(np.asarray(total + ef.residual["w"]),
+                               np.asarray(gsum), atol=1e-4)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones(4, jnp.int32)}}
+    path = str(tmp_path / "ck")
+    save_pytree(path, tree, step=7)
+    out = load_pytree(path, tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(out["b"]["c"]),
+                                  np.asarray(tree["b"]["c"]))
+
+
+def test_checkpoint_manager_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2, async_write=False)
+    tree = {"w": jnp.zeros(3)}
+    for s in (10, 20, 30):
+        mgr.save(s, tree)
+    assert mgr.steps() == [20, 30]
+    assert mgr.latest_step() == 30
+
+
+def test_driver_restart_resumes_exactly(tmp_path):
+    """Inject a failure; the driver must restore and produce bit-identical
+    final state vs an uninterrupted run (deterministic data + seek)."""
+    loss, params0, target = _quadratic_setup()
+    opt = adamw(0.05, weight_decay=0.0)
+
+    def step_fn(state, batch):
+        params, ostate = state
+        g = jax.grad(loss)(params)
+        g = jax.tree.map(lambda x: x + batch["noise"], g)
+        params, ostate, m = opt.update(g, ostate, params)
+        return (params, ostate), {"loss": loss(params)}
+
+    def make_data(start):
+        def gen():
+            step = start
+            while True:
+                rng = np.random.default_rng(step)
+                yield {"noise": jnp.float32(rng.standard_normal() * 0.01)}
+                step += 1
+        return gen()
+
+    def run(inject, subdir):
+        mgr = CheckpointManager(str(tmp_path / subdir), keep_last=3,
+                                async_write=False)
+        fail = {"armed": inject}
+
+        def injector(step):
+            if fail["armed"] and step == 33:
+                fail["armed"] = False
+                return True
+            return False
+
+        drv = TrainDriver(step_fn=step_fn,
+                          init_state=(params0, opt.init(params0)),
+                          make_data=make_data, ckpt=mgr, ckpt_every=10,
+                          failure_injector=injector, log_every=0,
+                          verbose=False)
+        state, report = drv.run(50)
+        return state, report
+
+    clean, rep0 = run(False, "clean")
+    faulty, rep1 = run(True, "faulty")
+    assert rep0["restarts"] == 0
+    assert rep1["restarts"] == 1
+    np.testing.assert_allclose(np.asarray(clean[0]["w"]),
+                               np.asarray(faulty[0]["w"]), atol=1e-7)
+
+
+def test_token_stream_seekable():
+    a = TokenStream(64, 4, 16, seed=3)
+    batches = [next(a) for _ in range(5)]
+    b = TokenStream(64, 4, 16, seed=3, start_step=3)
+    np.testing.assert_array_equal(batches[3]["tokens"], next(b)["tokens"])
+    np.testing.assert_array_equal(batches[4]["labels"], next(b)["labels"])
+
+
+def test_token_stream_learnable_structure():
+    s = TokenStream(16, 8, 32, seed=0)
+    b = next(s)
+    # 80% of transitions follow the planted permutation
+    perm = s.perm
+    hits = (perm[b["tokens"]] == b["labels"]).mean()
+    assert hits > 0.6
