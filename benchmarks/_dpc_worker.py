@@ -1,6 +1,10 @@
 """Worker for shard-scaling benchmarks: runs under
 XLA_FLAGS=--xla_force_host_platform_device_count=8 in a subprocess.
-Prints CSV rows:  name,us_per_call,derived"""
+Prints CSV rows:  name,us_per_call,derived
+
+Covers 1-D slab layouts and 2-D/3-D block layouts at equal device counts,
+so the strong/weak tables expose the surface-to-volume gain of the block
+decomposition (ghost_bytes column)."""
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -16,6 +20,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import (compute_order, make_dpc_mesh, distributed_manifold,
                         distributed_connected_components)
+from repro.configs.dpc_grid import SCALING_LAYOUTS
 from repro.data import perlin_noise
 
 
@@ -31,28 +36,30 @@ def timeit(fn, *args, reps=3):
 
 def main():
     mode = sys.argv[1]           # "strong" | "weak"
-    base = int(sys.argv[2])      # grid edge length (strong) / per-shard (weak)
-    for n_shards in (1, 2, 4, 8):
+    base = int(sys.argv[2])      # grid edge length (strong) / per-block (weak)
+    for layout in SCALING_LAYOUTS:
+        pads = layout + (1,) * (3 - len(layout))
         if mode == "strong":
             dims = (base, base, base)
-        else:  # weak scaling: volume grows with shard count
-            dims = (base * n_shards, base, base)
+        else:  # weak scaling: volume grows with the block lattice
+            dims = tuple(base * p for p in pads)
         field = perlin_noise(dims, frequency=0.1, seed=0)
         order = compute_order(jnp.asarray(field))
         mask = jnp.asarray(field > np.quantile(field, 0.9))
-        mesh = make_dpc_mesh(n_shards)
+        mesh = make_dpc_mesh(layout)
+        tag = "x".join(map(str, layout))
 
         tab = "tab1" if mode == "strong" else "tab2"
         us, (labels, stats) = timeit(
             lambda o: distributed_manifold(o, mesh, 6, True), order)
-        print(f"{tab}_{mode}_seg_{base}_{n_shards}shards,{us:.0f},"
+        print(f"{tab}_{mode}_seg_{base}_{tag}blocks,{us:.0f},"
               f"ghost_bytes={int(stats.ghost_bytes)};"
               f"local_iters={int(stats.local_iters)};"
               f"table_iters={int(stats.table_iters)}", flush=True)
 
         us, (labels, stats) = timeit(
             lambda m: distributed_connected_components(m, mesh, 6), mask)
-        print(f"{tab}_{mode}_cc_{base}_{n_shards}shards,{us:.0f},"
+        print(f"{tab}_{mode}_cc_{base}_{tag}blocks,{us:.0f},"
               f"ghost_bytes={int(stats.ghost_bytes)};"
               f"masked_frac={float(stats.masked_ghost_fraction):.4f};"
               f"stitch_rounds={int(stats.stitch_rounds)}", flush=True)

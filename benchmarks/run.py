@@ -166,14 +166,35 @@ def lm_train_microbench():
     _emit("lm_train_step_smoke_8x64", us, f"params={cfg.n_params()}")
 
 
-def main() -> None:
+# name -> (fn, default kwargs, --tiny kwargs for the CI smoke step)
+_BENCHES = {
+    "tab3_threshold": (tab3_threshold, {"edge": 64}, {"edge": 24}),
+    "alg_doubling_vs_wave": (alg_doubling_vs_wave, {"edge": 256},
+                             {"edge": 64}),
+    "kernels": (kernels, {}, {}),
+    "lm_train_microbench": (lm_train_microbench, {}, {}),
+    "tab1_strong_scaling": (tab1_strong_scaling, {"base": 64}, {"base": 16}),
+    "tab2_weak_scaling": (tab2_weak_scaling, {"base": 32}, {"base": 8}),
+}
+
+
+def main(argv=None) -> None:
+    """Usage: run.py [--tiny] [bench ...] — no names runs everything.
+    Output is CSV on stdout (CI redirects it into an artifact)."""
+    argv = sys.argv[1:] if argv is None else argv
+    tiny = "--tiny" in argv
+    names = [a for a in argv if not a.startswith("-")]
+    bad_flags = [a for a in argv if a.startswith("-") and a != "--tiny"]
+    if bad_flags:
+        sys.exit(f"unknown flag(s) {bad_flags}; the only flag is --tiny")
+    unknown = [n for n in names if n not in _BENCHES]
+    if unknown:
+        sys.exit(f"unknown benchmark(s) {unknown}; "
+                 f"available: {', '.join(_BENCHES)}")
     print("name,us_per_call,derived")
-    tab3_threshold(64)
-    alg_doubling_vs_wave(256)
-    kernels()
-    lm_train_microbench()
-    tab1_strong_scaling(64)
-    tab2_weak_scaling(32)
+    for n in names or list(_BENCHES):
+        fn, full_kw, tiny_kw = _BENCHES[n]
+        fn(**(tiny_kw if tiny else full_kw))
 
 
 if __name__ == "__main__":

@@ -3,7 +3,12 @@ connected components of Perlin-noise structured grids (paper §5).
 
 Shapes mirror the paper's strong-scaling study; 1024^3 is the largest grid
 whose flat ids fit int32 (2048^3+ takes the int64 path, as the paper's
-32/64-bit id discussion prescribes)."""
+32/64-bit id discussion prescribes).
+
+`layout` is the block decomposition (per-grid-axis block counts) used for
+the distributed runs; mesh axis a decomposes grid axis a.  A 1-D layout
+recovers the original slab decomposition; the full config uses a 3-D block
+lattice, the paper's setup for its best surface-to-volume ratio."""
 import dataclasses
 
 FAMILY = "dpc"
@@ -18,6 +23,9 @@ class DPCConfig:
     # §Perf: the CC boundary mask equals (labels >= 0); gather_mask=False
     # drops the redundant mask all_gather from the ONE exchange
     gather_mask: bool = True
+    # block decomposition; cells fall back to the flat 1-D mesh when the
+    # layout does not match the available device count
+    layout: tuple = (8, 8, 4)         # 256 chips, one pod
 
 
 SHAPES = {
@@ -27,7 +35,8 @@ SHAPES = {
     "cc_512": {"kind": "dpc_cc", "dims": (512, 512, 512)},
 }
 
-# smoke grids keep X divisible by the 512-way flat mesh
+# smoke grids keep every decomposed axis divisible by the smoke layouts
+# (and X by the 512-way flat mesh)
 SMOKE_SHAPES = {
     "grid_512": {"kind": "dpc", "dims": (512, 8, 8)},
     "grid_1024": {"kind": "dpc", "dims": (1024, 8, 8)},
@@ -35,10 +44,14 @@ SMOKE_SHAPES = {
     "cc_512": {"kind": "dpc_cc", "dims": (512, 8, 8)},
 }
 
+# shard layouts exercised by the scaling benchmarks (1-D slabs vs 2-D/3-D
+# blocks at equal device counts)
+SCALING_LAYOUTS = ((1,), (2,), (4,), (8,), (2, 2), (2, 4), (2, 2, 2))
+
 
 def full_config() -> DPCConfig:
     return DPCConfig()
 
 
 def smoke_config() -> DPCConfig:
-    return DPCConfig(name="dpc-grid-smoke")
+    return DPCConfig(name="dpc-grid-smoke", layout=(2, 2, 2))

@@ -13,7 +13,8 @@ from .connected_components import (connected_components_grid,
 from .baseline_cc import label_propagation_grid, extract_masked_edges
 from .distributed import (distributed_manifold,
                           distributed_connected_components,
-                          make_dpc_mesh, DPCStats, AXIS)
+                          make_dpc_mesh, BlockDecomp, DPCStats, AXIS,
+                          BLOCK_AXES)
 
 __all__ = [
     "compute_order", "inverse_permutation", "flat_ids", "compact_labels",
@@ -26,5 +27,5 @@ __all__ = [
     "component_sizes", "CCResult",
     "label_propagation_grid", "extract_masked_edges",
     "distributed_manifold", "distributed_connected_components",
-    "make_dpc_mesh", "DPCStats", "AXIS",
+    "make_dpc_mesh", "BlockDecomp", "DPCStats", "AXIS", "BLOCK_AXES",
 ]

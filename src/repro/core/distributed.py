@@ -1,32 +1,43 @@
 """Distributed Path Compression (paper Alg. 1 + Alg. 2) under shard_map.
 
-Decomposition: 1-D slabs along grid axis 0 over a mesh axis (default
-"shards"), one ghost plane per face — the paper's "one layer of ghost
-vertices".  All pointers are *global* flat ids throughout; global<->local
-index conversion is pure integer arithmetic for slab decomposition (replacing
-TTK's triangulation id-translation structures).
+Decomposition: N-D *blocks* over a multi-axis device mesh.  Mesh axis ``a``
+decomposes grid axis ``a`` (a 1-D mesh recovers the original slab layout);
+each block carries one layer of ghost vertices on every decomposed face —
+the paper's "one layer of ghost vertices".  Ghost corners/edges are filled
+by exchanging axis-by-axis on the progressively extended block, the standard
+dimension-ordered halo exchange.
+
+The local phase runs entirely in *local* extended-block ids.  Because every
+vertex of the extended block has global coordinates ``origin + local``, the
+local raveled order is exactly the global id order restricted to the block,
+so id-maximum arguments (CC labels = largest member id) transfer verbatim;
+local ids are converted to global flat ids by one gather through a
+coordinate-arithmetic id map (replacing TTK's id-translation structures).
 
 Phases (MS manifolds):
-  1. halo exchange of the order field (lax.ppermute, one plane per face);
-  2. steepest init on the extended block; ghost-plane vertices pretend to be
+  1. halo exchange of the order field (one lax.ppermute pair per mesh axis);
+  2. steepest init on the extended block; ghost vertices pretend to be
      maxima (point to themselves) — Alg. 1 lines 6-8;
   3. local path compression to the block fixpoint (no collectives);
-  4. ONE global communication step: all_gather of the two owned boundary
-     planes' compressed pointers — the SPMD equivalent of Alg. 2's
-     Gather->rank0->Scatter->Allgather staging (deviation (b) in DESIGN.md);
-  5. pointer doubling on the gathered (P, 2, R) ghost table — every device
-     compresses the same table, resolving segments that stretch across
-     multiple ranks (paper Fig. 2);
+  4. ONE global communication step: all_gather of every owned boundary
+     *face* (two per decomposed axis) into a replicated flat table — the
+     SPMD equivalent of Alg. 2's Gather->rank0->Scatter->Allgather staging
+     (deviation (b) in DESIGN.md);
+  5. pointer doubling on the gathered table — every device compresses the
+     same table, resolving segments that stretch across multiple blocks
+     (paper Fig. 2);
   6. final substitution: owned pointers that target any boundary vertex are
      replaced by the table's compressed target — Alg. 2 lines 27-33.
 
 Connected components add the stitch pass locally (Alg. 3) and, on the
-gathered table, a hook+propagate fixpoint over cut edges and equal-label
-groups.  The paper compresses the ghost table with path compression only;
-that is sufficient for MS integral lines (strictly order-increasing chains)
-but not for CC labels that must *merge* across a cut whose local roots are
-interior vertices — deviation (d2) in DESIGN.md.  The fix stays within the
-paper's single-communication-phase budget: it only post-processes the
+gathered table, a hook+propagate fixpoint over the static boundary
+adjacency (all stencil edges between table vertices, which covers axis cuts
+*and* diagonal block-to-block edges) and equal-label groups.  The paper
+compresses the ghost table with path compression only; that is sufficient
+for MS integral lines (strictly order-increasing chains) but not for CC
+labels that must *merge* across a cut whose local roots are interior
+vertices — deviation (d2) in DESIGN.md.  The fix stays within the paper's
+single-communication-phase budget: it only post-processes the
 already-gathered table.
 """
 from __future__ import annotations
@@ -41,10 +52,13 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .steepest import grid_steepest, grid_mask_argmax, neighbor_offsets
+from ._shardmap import shard_map_norep
+from .steepest import (grid_steepest, grid_mask_argmax, neighbor_offsets,
+                       shift_fill)
 from .pathcompress import path_compress
 
-AXIS = "shards"
+AXIS = "shards"                 # legacy 1-D axis name (make_flat_mesh interop)
+BLOCK_AXES = ("bx", "by", "bz")  # axis names used by make_dpc_mesh layouts
 
 
 class DPCStats(NamedTuple):
@@ -55,74 +69,221 @@ class DPCStats(NamedTuple):
     masked_ghost_fraction: jax.Array  # CC: fraction of boundary actually masked
 
 
-def make_dpc_mesh(n_shards: int, devices=None) -> Mesh:
-    return jax.make_mesh((n_shards,), (AXIS,), devices=devices)
+def make_dpc_mesh(layout, devices=None) -> Mesh:
+    """Device mesh for a block decomposition.
+
+    layout: int (1-D slabs, legacy "shards" axis) or a tuple of up to three
+    per-axis block counts, e.g. (4, 2) or (2, 2, 2); mesh axis ``a``
+    decomposes grid axis ``a``.
+    """
+    if isinstance(layout, (int, np.integer)):
+        return jax.make_mesh((int(layout),), (AXIS,), devices=devices)
+    layout = tuple(int(p) for p in layout)
+    if not 1 <= len(layout) <= len(BLOCK_AXES):
+        raise ValueError(f"layout {layout} must have 1..3 axes")
+    return jax.make_mesh(layout, BLOCK_AXES[:len(layout)], devices=devices)
 
 
-# --- shared helpers ---------------------------------------------------------
+# --- static decomposition geometry ------------------------------------------
 
 
-def _halo(plane_from_prev, plane_from_next, p, n_shards, fill, axis):
-    """ghost_lo[p] = plane_from_prev = block[p-1][-1]; symmetric for hi."""
-    if n_shards == 1:
-        lo = jnp.full_like(plane_from_prev, fill)
-        hi = jnp.full_like(plane_from_next, fill)
-        return lo, hi
-    lo = lax.ppermute(plane_from_prev, axis,
-                      [(i, i + 1) for i in range(n_shards - 1)])
-    hi = lax.ppermute(plane_from_next, axis,
-                      [(i + 1, i) for i in range(n_shards - 1)])
-    lo = jnp.where(p == 0, fill, lo)
-    hi = jnp.where(p == n_shards - 1, fill, hi)
-    return lo, hi
+class BlockDecomp:
+    """Static geometry of an N-D block decomposition of a structured grid.
+
+    Grid axis ``a`` (a < k) is split into ``layout[a]`` equal blocks mapped
+    to mesh axis ``names[a]``; remaining grid axes stay whole.  Provides the
+    global<->local id arithmetic and the layout of the gathered boundary
+    table: the table is the concatenation, over decomposed axes ``a``, of
+    (nblocks, 2, face_size[a]) segments holding every block's lo/hi owned
+    face along ``a`` (block order row-major in mesh-axis order, matching
+    ``lax.all_gather(..., names)``).
+    """
+
+    def __init__(self, grid_shape, layout, names):
+        self.grid = tuple(int(x) for x in grid_shape)
+        self.layout = tuple(int(p) for p in layout)
+        self.names = tuple(names)
+        self.ndim = len(self.grid)
+        self.k = len(self.layout)
+        if self.k > self.ndim:
+            raise ValueError(f"mesh has {self.k} axes but grid is "
+                             f"{self.ndim}-D")
+        for a in range(self.k):
+            if self.grid[a] % self.layout[a]:
+                raise ValueError(f"grid axis {a} ({self.grid[a]}) not "
+                                 f"divisible by {self.layout[a]} blocks")
+        self.local = tuple(
+            self.grid[i] // self.layout[i] if i < self.k else self.grid[i]
+            for i in range(self.ndim))
+        self.ext = tuple(
+            self.local[i] + 2 if i < self.k else self.local[i]
+            for i in range(self.ndim))
+        self.nblocks = math.prod(self.layout)
+        self.size = math.prod(self.grid)
+        if self.size < 2**31:
+            self.id_dtype = jnp.int32
+        elif jax.config.jax_enable_x64:
+            self.id_dtype = jnp.int64
+        else:
+            # without x64, jnp silently downcasts int64 -> int32 and global
+            # ids past 2**31 would wrap negative; refuse instead
+            raise ValueError(
+                f"grid has {self.size} >= 2**31 vertices; the int64 id path "
+                "requires jax_enable_x64")
+        # row-major strides of the global grid and of the block lattice
+        self.stride = tuple(math.prod(self.grid[i + 1:])
+                            for i in range(self.ndim))
+        self.bstride = tuple(math.prod(self.layout[a + 1:])
+                             for a in range(self.k))
+        # per-axis owned-face geometry (face = local block minus that axis)
+        self.face_stride, self.face_size, self.face_offset = [], [], []
+        off = 0
+        for a in range(self.k):
+            st, acc = {}, 1
+            for i in reversed([i for i in range(self.ndim) if i != a]):
+                st[i] = acc
+                acc *= self.local[i]
+            self.face_stride.append(st)
+            self.face_size.append(acc)
+            self.face_offset.append(off)
+            off += self.nblocks * 2 * acc
+        self.table_size = off
+        self.owned_slices = tuple(
+            slice(1, self.local[i] + 1) if i < self.k else slice(None)
+            for i in range(self.ndim))
+
+    def ghost_mask(self) -> np.ndarray:
+        """Boolean ext-block array marking the ghost layers."""
+        m = np.zeros(self.ext, bool)
+        for a in range(self.k):
+            idx = [slice(None)] * self.ndim
+            idx[a] = 0
+            m[tuple(idx)] = True
+            idx[a] = self.ext[a] - 1
+            m[tuple(idx)] = True
+        return m
+
+    def boundary_pos(self, g, xp=jnp):
+        """Map global flat ids to their canonical slot in the gathered
+        boundary table.  Returns (is_boundary, flat_slot); a vertex on
+        several faces (block edge/corner) is canonicalised to the lowest
+        decomposed axis.  Works under numpy (static precompute) and jnp
+        (traced lookups)."""
+        xs = [(g // self.stride[i]) % self.grid[i] for i in range(self.ndim)]
+        B = 0
+        for a in range(self.k):
+            B = B + (xs[a] // self.local[a]) * self.bstride[a]
+        is_b = xp.zeros_like(g, dtype=bool)
+        pos = xp.zeros_like(g)
+        for a in reversed(range(self.k)):
+            L = self.local[a]
+            xin = xs[a] % L
+            on = (xin == 0) | (xin == L - 1)
+            j = xp.where(xin == L - 1, 1, 0)
+            r = 0
+            for i in range(self.ndim):
+                if i == a:
+                    continue
+                r = r + (xs[i] % self.local[i]) * self.face_stride[a][i]
+            p = self.face_offset[a] + (B * 2 + j) * self.face_size[a] + r
+            pos = xp.where(on, p, pos)
+            is_b = is_b | on
+        return is_b, pos
+
+    def slot_coords(self, xp=jnp):
+        """(table_size, ndim) global coordinates of every table slot.
+        Traced by default: materialising this as a host-side constant would
+        bake O(table_size * ndim) bytes into every executable."""
+        parts = []
+        for a in range(self.k):
+            F = self.face_size[a]
+            n = self.nblocks * 2 * F
+            s = xp.arange(n, dtype=np.int32)
+            B, j, r = s // (2 * F), (s % (2 * F)) // F, s % F
+            cols = []
+            for i in range(self.ndim):
+                if i == a:
+                    c = ((B // self.bstride[a]) % self.layout[a]
+                         * self.local[a] + j * (self.local[a] - 1))
+                else:
+                    c = (r // self.face_stride[a][i]) % self.local[i]
+                    if i < self.k:
+                        c = ((B // self.bstride[i]) % self.layout[i]
+                             * self.local[i] + c)
+                cols.append(c)
+            parts.append(xp.stack(cols, axis=1))
+        return xp.concatenate(parts, axis=0)
 
 
-def _local_compress(d_ext, base, max_iter=64):
-    """Path compression with global-id pointers confined to the extended
-    block: local position = gid - base.  Negative entries (unmasked CC
-    sentinels / edge-shard ghost self-ids) are fixed points."""
-    size = d_ext.size
-
-    def jump(d):
-        flat = d.ravel()
-        lidx = jnp.clip(flat - base, 0, size - 1)
-        nd = flat[lidx]
-        return jnp.where(flat >= 0, nd, flat).reshape(d.shape)
-
-    def cond(s):
-        _, ch, i = s
-        return ch & (i < max_iter)
-
-    def body(s):
-        d, _, i = s
-        nd = jump(d)
-        return nd, jnp.any(nd != d), i + jnp.int32(1)
-
-    d, _, iters = lax.while_loop(cond, body,
-                                 (d_ext, jnp.asarray(True), jnp.int32(0)))
-    return d, iters
+def _decomp_for(mesh: Mesh, grid_shape) -> BlockDecomp:
+    names = tuple(mesh.axis_names)
+    layout = tuple(mesh.shape[n] for n in names)
+    return BlockDecomp(grid_shape, layout, names)
 
 
-def _boundary_pos(gid, x_local, n_shards, R):
-    """Map a global id to its (row, col) in the gathered (P, 2, R) table.
-    Returns (is_boundary, flat_row_index)."""
-    x = gid // R
-    r = gid % R
-    s = x // x_local
-    xin = x % x_local
-    is_b = ((xin == 0) | (xin == x_local - 1)) & (s >= 0) & (s < n_shards)
-    j = jnp.where(xin == x_local - 1, 1, 0)
-    return is_b, (s * 2 + j) * R + r
+# --- shared traced helpers ---------------------------------------------------
 
 
-def _table_compress(T, x_local, n_shards, R, max_iter=64):
-    """Pointer doubling on the gathered ghost table (Alg. 2 lines 15-25).
-    Entries < 0 (unmasked, CC only) are fixed."""
+def _halo_extend(ext, dim, name, n_blocks, fill):
+    """Extend `ext` with one ghost slab per face along grid axis `dim`,
+    exchanged over mesh axis `name` (fill at the domain boundary).  Applied
+    axis-by-axis, so later axes forward earlier ghosts into the corners."""
+    lo_src = lax.index_in_dim(ext, ext.shape[dim] - 1, dim, keepdims=True)
+    hi_src = lax.index_in_dim(ext, 0, dim, keepdims=True)
+    if n_blocks == 1:
+        lo = jnp.full_like(lo_src, fill)
+        hi = jnp.full_like(hi_src, fill)
+    else:
+        p = lax.axis_index(name)
+        lo = lax.ppermute(lo_src, name,
+                          [(i, i + 1) for i in range(n_blocks - 1)])
+        hi = lax.ppermute(hi_src, name,
+                          [(i + 1, i) for i in range(n_blocks - 1)])
+        lo = jnp.where(p == 0, fill, lo)
+        hi = jnp.where(p == n_blocks - 1, fill, hi)
+    return jnp.concatenate([lo, ext, hi], axis=dim)
+
+
+def _gid_map(dec: BlockDecomp):
+    """Global flat id of every extended-block position (out-of-domain ghost
+    coordinates produce ids that are never read: their order/mask fill keeps
+    them off every pointer path)."""
+    total = None
+    for i in range(dec.ndim):
+        if i < dec.k:
+            b = lax.axis_index(dec.names[i])
+            x = b * dec.local[i] - 1 + jnp.arange(dec.ext[i],
+                                                  dtype=dec.id_dtype)
+        else:
+            x = jnp.arange(dec.grid[i], dtype=dec.id_dtype)
+        shape = [1] * dec.ndim
+        shape[i] = -1
+        part = (x * dec.stride[i]).reshape(shape)
+        total = part if total is None else total + part
+    return total
+
+
+def _gather_table(owned, dec: BlockDecomp):
+    """The single communication phase: all_gather every block's owned lo/hi
+    face along each decomposed axis into one replicated flat table laid out
+    as BlockDecomp.boundary_pos expects."""
+    parts = []
+    for a in range(dec.k):
+        lo = lax.index_in_dim(owned, 0, a, keepdims=False)
+        hi = lax.index_in_dim(owned, dec.local[a] - 1, a, keepdims=False)
+        bt = jnp.stack([lo.reshape(-1), hi.reshape(-1)])     # (2, F_a)
+        g = lax.all_gather(bt, dec.names)                    # (nblocks, 2, F_a)
+        parts.append(g.reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def _table_compress(T, dec: BlockDecomp, max_iter=64):
+    """Pointer doubling on the gathered flat table (Alg. 2 lines 15-25).
+    Entries < 0 (unmasked, CC only) and non-boundary targets are fixed."""
     def lookup(t):
-        g = t.ravel()
-        is_b, pos = _boundary_pos(jnp.clip(g, 0), x_local, n_shards, R)
-        tv = t.ravel()[jnp.clip(pos, 0, t.size - 1)]
-        return jnp.where((g >= 0) & is_b, tv, g).reshape(t.shape)
+        is_b, pos = dec.boundary_pos(jnp.clip(t, 0), jnp)
+        tv = t[jnp.clip(pos, 0, t.size - 1)]
+        return jnp.where((t >= 0) & is_b, tv, t)
 
     def cond(s):
         _, ch, i = s
@@ -141,49 +302,41 @@ def _table_compress(T, x_local, n_shards, R, max_iter=64):
 # --- MS manifolds ------------------------------------------------------------
 
 
-def _manifold_block(order_blk, *, n_shards, connectivity, axis):
+def _manifold_block(order_blk, *, dec: BlockDecomp, connectivity):
     """Always runs the *descending* direction; the ascending manifold is
     obtained by flipping the order field outside (keeps the -1 halo fill
     strictly below every candidate)."""
-    p = lax.axis_index(axis)
-    x_local = order_blk.shape[0]
-    rest = order_blk.shape[1:]
-    R = int(np.prod(rest))
-
     # 1. order halo (fill -1: below every real order value, never steepest)
-    lo, hi = _halo(order_blk[-1], order_blk[0], p, n_shards, -1, axis)
-    ext = jnp.concatenate([lo[None], order_blk, hi[None]], axis=0)
+    ext = order_blk
+    for a in range(dec.k):
+        ext = _halo_extend(ext, a, dec.names[a], dec.layout[a], -1)
 
-    # 2. steepest init with global ids; ghosts pretend to be maxima
-    base = (p * x_local - 1) * R
-    ptr = grid_steepest(ext, connectivity, descending=True,
-                        id_offset=base).reshape(ext.shape)
-    gids = jnp.arange(ext.size, dtype=jnp.int32).reshape(ext.shape) + base
-    xs = jnp.arange(x_local + 2)
-    is_ghost = ((xs == 0) | (xs == x_local + 1)).reshape(
-        (-1,) + (1,) * len(rest))
-    d_ext = jnp.where(is_ghost, gids, ptr)
+    # 2. steepest init in local ids; ghosts pretend to be maxima
+    ptr = grid_steepest(ext, connectivity, descending=True)
+    ghost = jnp.asarray(dec.ghost_mask().ravel())
+    lids = jnp.arange(ext.size, dtype=jnp.int32)
+    d = jnp.where(ghost, lids, ptr)
 
     # 3. local compression (Alg. 1 lines 9-19)
-    d_ext, local_iters = _local_compress(d_ext, base)
+    d, local_iters = path_compress(d)
 
-    # 4. the single communication phase (Alg. 2)
-    bt = jnp.stack([d_ext[1].ravel(), d_ext[x_local].ravel()])  # (2, R)
-    T = lax.all_gather(bt, axis)                                # (P, 2, R)
+    # 4. to global ids + the single communication phase (Alg. 2)
+    owned = _gid_map(dec).ravel()[d].reshape(dec.ext)[dec.owned_slices]
+    T = _gather_table(owned, dec)
 
     # 5. ghost-table compression (identical on every device)
-    T, table_iters = _table_compress(T, x_local, n_shards, R)
+    T, table_iters = _table_compress(T, dec)
 
     # 6. final substitution (Alg. 2 lines 27-33)
-    owned = d_ext[1:x_local + 1].ravel()
-    is_b, pos = _boundary_pos(owned, x_local, n_shards, R)
-    final = jnp.where(is_b, T.ravel()[jnp.clip(pos, 0, T.size - 1)], owned)
+    o = owned.ravel()
+    is_b, pos = dec.boundary_pos(o, jnp)
+    final = jnp.where(is_b, T[jnp.clip(pos, 0, T.size - 1)], o)
 
     stats = DPCStats(
-        local_iters=lax.pmax(local_iters, axis),
+        local_iters=lax.pmax(local_iters, dec.names),
         table_iters=table_iters,  # identical on all devices (same table)
         stitch_rounds=jnp.int32(0),
-        ghost_bytes=jnp.float32(T.size) * 4,
+        ghost_bytes=jnp.float32(T.size * T.dtype.itemsize),
         masked_ghost_fraction=jnp.float32(1.0),
     )
     return final.reshape(order_blk.shape), stats
@@ -191,47 +344,42 @@ def _manifold_block(order_blk, *, n_shards, connectivity, axis):
 
 def distributed_manifold(order, mesh: Mesh, connectivity: int = 6,
                          descending: bool = True):
-    """Descending (or ascending) manifold of a slab-sharded order field.
+    """Descending (or ascending) manifold of a block-sharded order field.
 
-    order: (X, ...) int array, X divisible by mesh axis size.  Returns the
-    label grid (sharded the same way) and replicated DPCStats.
+    order: int array whose leading axes are divisible by the mesh shape
+    (mesh axis a decomposes grid axis a).  Returns the label grid (sharded
+    the same way) and replicated DPCStats.
     """
-    n_shards = mesh.shape[AXIS]
-    if order.shape[0] % n_shards:
-        raise ValueError(f"axis 0 ({order.shape[0]}) not divisible by "
-                         f"{n_shards} shards")
+    dec = _decomp_for(mesh, order.shape)
     if not descending:
         order = order.size - 1 - order  # ascending = descending on flipped order
-    fn = partial(_manifold_block, n_shards=n_shards,
-                 connectivity=connectivity, axis=AXIS)
-    ndim = order.ndim
-    sharded = P(AXIS, *([None] * (ndim - 1)))
-    mapped = jax.shard_map(
-        fn, mesh=mesh, in_specs=(sharded,),
-        out_specs=(sharded, DPCStats(*([P()] * 5))), check_vma=False)
+    fn = partial(_manifold_block, dec=dec, connectivity=connectivity)
+    spec = P(*dec.names, *([None] * (order.ndim - dec.k)))
+    mapped = shard_map_norep(fn, mesh, (spec,),
+                             (spec, DPCStats(*([P()] * 5))))
     return mapped(order)
 
 
 # --- connected components ----------------------------------------------------
 
 
-def _ext_stitch(d, mask_ext, connectivity, base, sentinel_pos):
-    """Stitch on the extended block with global-id labels (Alg. 3 ll. 25-29):
-    scatter-max at local position d[v]-base."""
-    from .steepest import shift_fill  # local import to avoid cycle at module load
-    out = d.ravel()
-    m = mask_ext
-    for off in neighbor_offsets(d.ndim, connectivity):
-        u_label = shift_fill(d, off, -1).ravel()
-        valid = m.ravel() & shift_fill(m, off, False).ravel() & (u_label >= 0)
-        tgt = jnp.where(valid, out - base, sentinel_pos)
+def _ext_stitch(d, mask_ext, connectivity, sentinel):
+    """Stitch on the extended block in local ids (Alg. 3 ll. 25-29):
+    scatter-max at position d[v]."""
+    out = d
+    dg = d.reshape(mask_ext.shape)
+    m = mask_ext.ravel()
+    for off in neighbor_offsets(mask_ext.ndim, connectivity):
+        u_label = shift_fill(dg, off, -1).ravel()
+        valid = m & shift_fill(mask_ext, off, False).ravel() & (u_label >= 0)
+        tgt = jnp.where(valid, out, sentinel)
         out = out.at[tgt].max(jnp.where(valid, u_label, -1), mode="drop")
-    return out.reshape(d.shape)
+    return out
 
 
-def _cc_local_fixpoint(d_ext, mask_ext, connectivity, base, max_rounds=64):
-    d, it0 = _local_compress(d_ext, base)
-    size = d_ext.size
+def _cc_local_fixpoint(d, mask_ext, connectivity, max_rounds=64):
+    d, it0 = path_compress(d)
+    sentinel = d.size
 
     def cond(s):
         _, ch, r, _ = s
@@ -239,8 +387,8 @@ def _cc_local_fixpoint(d_ext, mask_ext, connectivity, base, max_rounds=64):
 
     def body(s):
         cur, _, r, its = s
-        st = _ext_stitch(cur, mask_ext, connectivity, base, size)
-        nxt, it = _local_compress(st, base)
+        st = _ext_stitch(cur, mask_ext, connectivity, sentinel)
+        nxt, it = path_compress(st)
         return nxt, jnp.any(nxt != cur), r + jnp.int32(1), its + it
 
     d, _, rounds, its = lax.while_loop(
@@ -248,25 +396,19 @@ def _cc_local_fixpoint(d_ext, mask_ext, connectivity, base, max_rounds=64):
     return d, rounds, its
 
 
-def _cut_shifts(ndim, connectivity):
-    """Trailing-dim offsets of neighbor pairs that cross a slab cut (dx=+1)."""
-    return [off[1:] for off in neighbor_offsets(ndim, connectivity)
-            if off[0] == 1]
-
-
-def _table_propagate(Tstar, Mtab, cut_shifts, rest_shape, max_iter=64):
-    """Hook + propagate on the gathered table: fixpoint of
-      (a) max across masked cut edges (plane (i,1) <-> plane (i+1,0)),
+def _table_propagate(Tstar, Mflat, dec: BlockDecomp, connectivity,
+                     max_iter=64):
+    """Hook + propagate on the gathered flat table: fixpoint of
+      (a) max across masked stencil edges between boundary vertices (slot
+          adjacency derived arithmetically per round — covers axis cuts and
+          diagonal block pairs without a precomputed table),
       (b) max within equal-original-label groups (sorted-runs segment_max).
-    Computes, for every boundary position, the largest label of its global
+    Computes, for every boundary slot, the largest label of its global
     component.  Deviation (d2): the paper's path compression alone cannot
     perform these merges."""
-    from .steepest import shift_fill
-    n_shards = Tstar.shape[0]
-    flat_vals = Tstar.ravel()
-    msize = flat_vals.shape[0]
-    perm = jnp.argsort(flat_vals)
-    sorted_vals = flat_vals[perm]
+    msize = Tstar.size
+    perm = jnp.argsort(Tstar)
+    sorted_vals = Tstar[perm]
     run_start = jnp.concatenate(
         [jnp.ones((1,), bool), sorted_vals[1:] != sorted_vals[:-1]])
     run_id = jnp.cumsum(run_start) - 1
@@ -274,26 +416,28 @@ def _table_propagate(Tstar, Mtab, cut_shifts, rest_shape, max_iter=64):
         jnp.arange(msize, dtype=jnp.int32))
 
     def group_max(L):
-        ls = L.ravel()[perm]
-        gm = jax.ops.segment_max(ls, run_id, num_segments=msize)
-        return gm[run_id][inv_perm].reshape(L.shape)
+        gm = jax.ops.segment_max(L[perm], run_id, num_segments=msize)
+        return gm[run_id][inv_perm]
+
+    coords = dec.slot_coords()
+    grid = jnp.asarray(dec.grid, dtype=jnp.int32)
+    stride = jnp.asarray(dec.stride, dtype=dec.id_dtype)
+    offsets = neighbor_offsets(dec.ndim, connectivity)
 
     def cut_max(L):
-        # L, Mtab: (P, 2, *rest); position (i,1,q) <-> (i+1,0,q+s)
-        for s in cut_shifts:
-            a = L[:-1, 1]            # plane i (last owned)
-            b = L[1:, 0]             # plane i+1 (first owned)
-            ma = Mtab[:-1, 1]
-            mb = Mtab[1:, 0]
-            b_at_a = shift_fill(b, (0,) + tuple(s), -1)
-            mb_at_a = shift_fill(mb, (0,) + tuple(s), False)
-            new_a = jnp.where(ma & mb_at_a, jnp.maximum(a, b_at_a), a)
-            neg = tuple(-x for x in s)
-            a_at_b = shift_fill(a, (0,) + neg, -1)
-            ma_at_b = shift_fill(ma, (0,) + neg, False)
-            new_b = jnp.where(mb & ma_at_b, jnp.maximum(b, a_at_b), b)
-            L = L.at[:-1, 1].set(new_a).at[1:, 0].set(new_b)
-        return L
+        best = L
+        for off in offsets:
+            nx = coords + jnp.asarray(off, dtype=jnp.int32)
+            valid = jnp.all((nx >= 0) & (nx < grid), axis=1)
+            g = (jnp.clip(nx, 0, grid - 1).astype(dec.id_dtype)
+                 * stride).sum(axis=1)
+            is_b, pos = dec.boundary_pos(g, jnp)
+            ok = valid & is_b
+            safe = jnp.clip(pos, 0, msize - 1)
+            nl = jnp.where(ok, L[safe], -1)
+            nm = jnp.where(ok, Mflat[safe], False)
+            best = jnp.where(Mflat & nm, jnp.maximum(best, nl), best)
+        return best
 
     def cond(st):
         _, ch, i = st
@@ -306,97 +450,80 @@ def _table_propagate(Tstar, Mtab, cut_shifts, rest_shape, max_iter=64):
 
     L, _, iters = lax.while_loop(
         cond, body, (Tstar, jnp.asarray(True), jnp.int32(0)))
-    return L, (perm, sorted_vals, run_id), iters
+    return L, (perm, sorted_vals), iters
 
 
-def _cc_block(mask_blk, *, n_shards, connectivity, axis,
+def _cc_block(mask_blk, *, dec: BlockDecomp, connectivity,
               gather_mask: bool = True):
     """gather_mask=False is the §Perf variant: the boundary mask is exactly
     (T >= 0) — labels are -1 where unmasked — so the mask all-gather is
-    redundant and dropped (20% less exchange traffic, bit-identical)."""
-    p = lax.axis_index(axis)
-    x_local = mask_blk.shape[0]
-    rest = mask_blk.shape[1:]
-    R = int(np.prod(rest))
-
-    # 1. mask halo
-    lo, hi = _halo(mask_blk[-1], mask_blk[0], p, n_shards, False, axis)
-    mask_ext = jnp.concatenate([lo[None], mask_blk, hi[None]], axis=0)
+    redundant and dropped (less exchange traffic, bit-identical)."""
+    # 1. mask halo (fill False: domain boundary is never masked)
+    ext = mask_blk
+    for a in range(dec.k):
+        ext = _halo_extend(ext, a, dec.names[a], dec.layout[a], False)
 
     # 2. init: largest masked neighbor id; masked ghosts pretend self
-    base = (p * x_local - 1) * R
-    d0 = grid_mask_argmax(mask_ext, connectivity,
-                          id_offset=base).reshape(mask_ext.shape)
-    gids = jnp.arange(mask_ext.size, dtype=jnp.int32).reshape(
-        mask_ext.shape) + base
-    xs = jnp.arange(x_local + 2)
-    is_ghost = ((xs == 0) | (xs == x_local + 1)).reshape(
-        (-1,) + (1,) * len(rest))
-    d_ext = jnp.where(is_ghost & mask_ext, gids, d0)
+    d0 = grid_mask_argmax(ext, connectivity)
+    ghost = jnp.asarray(dec.ghost_mask().ravel())
+    lids = jnp.arange(ext.size, dtype=d0.dtype)
+    d = jnp.where(ghost & ext.ravel(), lids, d0)
 
     # 3. local CC fixpoint (stitch + compress, Alg. 3)
-    d_ext, stitch_rounds, local_iters = _cc_local_fixpoint(
-        d_ext, mask_ext, connectivity, base)
+    d, stitch_rounds, local_iters = _cc_local_fixpoint(d, ext, connectivity)
 
-    # 4. the single communication phase: labels (+ masks) of boundary planes
-    bt = jnp.stack([d_ext[1].reshape(rest), d_ext[x_local].reshape(rest)])
-    T = lax.all_gather(bt, axis)   # (P, 2, *rest)
+    # 4. to global ids + the single communication phase: labels (+ masks)
+    gid = _gid_map(dec).ravel()
+    dg = jnp.where(d >= 0, gid[jnp.clip(d, 0)], -1).reshape(dec.ext)
+    owned = dg[dec.owned_slices]
+    T = _gather_table(owned, dec)
     if gather_mask:
-        bm = jnp.stack([mask_ext[1], mask_ext[x_local]])
-        M = lax.all_gather(bm, axis)
+        M = _gather_table(ext[dec.owned_slices], dec)
     else:
         M = T >= 0                 # labels are -1 exactly where unmasked
 
     # 5a. positional chase (the paper's table compression — resolves chains
     #     through ghost labels, e.g. a part labeled with a ghost's id)
-    Tstar, table_iters = _table_compress(
-        T.reshape(n_shards, 2, R), x_local, n_shards, R)
-    Tstar = Tstar.reshape((n_shards, 2) + rest)
+    Tstar, table_iters = _table_compress(T, dec)
     # 5b. hook + propagate (deviation (d2)): merge labels across cuts
-    G, (perm, sorted_vals, run_id), prop_iters = _table_propagate(
-        Tstar, M, _cut_shifts(mask_ext.ndim, connectivity), rest)
+    G, (perm, sorted_vals), prop_iters = _table_propagate(
+        Tstar, M, dec, connectivity)
 
     # 6. substitution: chase own label through the table, then take its
     #    group's propagated maximum (value search over the sorted table)
-    owned = d_ext[1:x_local + 1].ravel()
-    is_b, pos = _boundary_pos(jnp.clip(owned, 0), x_local, n_shards, R)
-    chased = jnp.where((owned >= 0) & is_b,
-                       Tstar.ravel()[jnp.clip(pos, 0, Tstar.size - 1)], owned)
-    idx = jnp.searchsorted(sorted_vals, chased)
-    idx_c = jnp.clip(idx, 0, sorted_vals.shape[0] - 1)
+    o = owned.ravel()
+    is_b, pos = dec.boundary_pos(jnp.clip(o, 0), jnp)
+    chased = jnp.where((o >= 0) & is_b,
+                       Tstar[jnp.clip(pos, 0, Tstar.size - 1)], o)
+    idx_c = jnp.clip(jnp.searchsorted(sorted_vals, chased),
+                     0, sorted_vals.shape[0] - 1)
     found = sorted_vals[idx_c] == chased
-    g_sorted = G.ravel()[perm]
+    g_sorted = G[perm]
     improved = jnp.where(found & (chased >= 0),
                          jnp.maximum(g_sorted[idx_c], chased), chased)
-    final = jnp.where(owned < 0, -1, improved)
+    final = jnp.where(o < 0, -1, improved)
 
-    masked_frac = jnp.mean(M.astype(jnp.float32))
     stats = DPCStats(
-        local_iters=lax.pmax(local_iters, axis),
+        local_iters=lax.pmax(local_iters, dec.names),
         table_iters=table_iters + prop_iters,
-        stitch_rounds=lax.pmax(stitch_rounds, axis),
-        ghost_bytes=jnp.float32(T.size) * 4
+        stitch_rounds=lax.pmax(stitch_rounds, dec.names),
+        ghost_bytes=jnp.float32(T.size * T.dtype.itemsize)
         + (jnp.float32(M.size) if gather_mask else 0.0),
-        masked_ghost_fraction=masked_frac,
+        masked_ghost_fraction=jnp.mean(M.astype(jnp.float32)),
     )
     return final.reshape(mask_blk.shape), stats
 
 
 def distributed_connected_components(mask, mesh: Mesh, connectivity: int = 6,
                                      gather_mask: bool = True):
-    """Mask-implicit connected components of a slab-sharded grid (Alg. 3 +
+    """Mask-implicit connected components of a block-sharded grid (Alg. 3 +
     Alg. 2).  Returns (labels, DPCStats); labels carry the largest vertex id
     of the component, -1 where unmasked.  gather_mask=False drops the
     redundant mask exchange (§Perf)."""
-    n_shards = mesh.shape[AXIS]
-    if mask.shape[0] % n_shards:
-        raise ValueError(f"axis 0 ({mask.shape[0]}) not divisible by "
-                         f"{n_shards} shards")
-    fn = partial(_cc_block, n_shards=n_shards, connectivity=connectivity,
-                 axis=AXIS, gather_mask=gather_mask)
-    ndim = mask.ndim
-    sharded = P(AXIS, *([None] * (ndim - 1)))
-    mapped = jax.shard_map(
-        fn, mesh=mesh, in_specs=(sharded,),
-        out_specs=(sharded, DPCStats(*([P()] * 5))), check_vma=False)
+    dec = _decomp_for(mesh, mask.shape)
+    fn = partial(_cc_block, dec=dec, connectivity=connectivity,
+                 gather_mask=gather_mask)
+    spec = P(*dec.names, *([None] * (mask.ndim - dec.k)))
+    mapped = shard_map_norep(fn, mesh, (spec,),
+                             (spec, DPCStats(*([P()] * 5))))
     return mapped(mask)

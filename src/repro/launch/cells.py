@@ -311,16 +311,29 @@ def build_bst_cell(arch_id, mod, shape_name, shape, mesh, smoke) -> Cell:
 def build_dpc_cell(arch_id, mod, shape_name, shape, mesh, smoke) -> Cell:
     from repro.core import (distributed_manifold,
                             distributed_connected_components)
+    from repro.launch.mesh import make_block_mesh
     cfg = mod.smoke_config() if smoke else mod.full_config()
     dims = shape["dims"]
-    flat = make_flat_mesh(mesh)
-    sh = NamedSharding(flat, P("shards", *([None] * (len(dims) - 1))))
+    # block decomposition from the config when it matches the device count
+    # (and divides the grid); otherwise the flat 1-D slab mesh
+    layout = tuple(getattr(cfg, "layout", ()) or ())
+    n_dev = mesh.devices.size
+    if (layout and math.prod(layout) == n_dev and len(layout) <= len(dims)
+            and all(d % p == 0 for d, p in zip(dims, layout))):
+        dpc_mesh = make_block_mesh(layout, mesh)
+        note = f"lowered on the {'x'.join(map(str, layout))} block mesh"
+    else:
+        dpc_mesh = make_flat_mesh(mesh)
+        note = "lowered on the flattened 1-D mesh"
+    names = tuple(dpc_mesh.axis_names)
+    sh = NamedSharding(dpc_mesh,
+                       P(*names, *([None] * (len(dims) - len(names)))))
 
     if shape["kind"] == "dpc":
         inp = S(dims, jnp.int32)
 
         def step(order):
-            labels, stats = distributed_manifold(order, flat,
+            labels, stats = distributed_manifold(order, dpc_mesh,
                                                  cfg.connectivity)
             return labels, stats
     else:
@@ -328,12 +341,12 @@ def build_dpc_cell(arch_id, mod, shape_name, shape, mesh, smoke) -> Cell:
 
         def step(mask):
             labels, stats = distributed_connected_components(
-                mask, flat, cfg.connectivity,
+                mask, dpc_mesh, cfg.connectivity,
                 gather_mask=getattr(cfg, "gather_mask", True))
             return labels, stats
 
     return Cell(arch_id, shape_name, "dpc", cfg, shape, step,
-                (inp,), (sh,), note="lowered on the flattened 1-D mesh")
+                (inp,), (sh,), note=note)
 
 
 # --- registry -----------------------------------------------------------------

@@ -20,6 +20,27 @@ def make_flat_mesh(mesh=None, name: str = "shards"):
     return jax.make_mesh((devices.size,), (name,), devices=devices)
 
 
+def make_block_mesh(layout, mesh=None):
+    """N-D view over the same devices — the DPC block lattice.
+
+    layout: per-axis block counts, e.g. (4, 2) or (2, 2, 2); mesh axis a
+    decomposes grid axis a (axis names bx/by/bz).  Reuses the devices of
+    `mesh` (default: the production mesh) so the DPC workload can share a
+    pod with training jobs; total layout size must match the device count.
+    """
+    import math
+
+    from repro.core import make_dpc_mesh
+    if mesh is None:
+        mesh = make_production_mesh()
+    devices = list(mesh.devices.reshape(-1))
+    layout = tuple(int(p) for p in layout)
+    if math.prod(layout) != len(devices):
+        raise ValueError(f"layout {layout} needs {math.prod(layout)} devices"
+                         f" but mesh has {len(devices)}")
+    return make_dpc_mesh(layout, devices=devices)
+
+
 def make_smoke_mesh(n: int | None = None):
     """Whatever this host has (tests / examples)."""
     n = n or len(jax.devices())

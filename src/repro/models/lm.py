@@ -394,13 +394,13 @@ def _moe_ffn_shardmap(x2d, lp, cfg: LMConfig):
             lax.psum(probs.sum(0) / tp, "model")
 
     dspec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
-    y, counts, psum = jax.shard_map(
-        inner, mesh=mesh,
+    from repro.core._shardmap import shard_map_norep
+    y, counts, psum = shard_map_norep(
+        inner, mesh,
         in_specs=(P(dspec[0], None), P(None, None),
                   P("model", None, None), P("model", None, None),
                   P("model", None, None)),
         out_specs=(P(dspec[0], None), P(dspec[0]), P(dspec[0])),
-        check_vma=False,
     )(x2d, lp["router"], lp["we_gate"], lp["we_up"], lp["we_down"])
 
     # shared experts + aux loss in GSPMD land

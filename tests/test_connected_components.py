@@ -1,9 +1,17 @@
 """Connected components (Alg. 3) vs BFS oracle, incl. the stitch-iteration
-counter-example motivating deviation (d) in DESIGN.md."""
+counter-example motivating deviation (d) in DESIGN.md.
+
+Property tests run under hypothesis when installed, else on a fixed seed
+sweep (plain parametrized cases)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (connected_components_grid, connected_components_graph,
                         component_sizes, label_propagation_grid)
@@ -55,9 +63,7 @@ def test_stitch_needs_iteration():
     assert labels[mask].max() == labels[mask].min() == 8 * 9 + 8
 
 
-@given(st.integers(0, 2**31 - 1), st.floats(0.1, 0.9))
-@settings(max_examples=30, deadline=None)
-def test_property_random_grids(seed, p):
+def _check_random_grid(seed, p):
     rng = np.random.default_rng(seed)
     mask = rng.random((12, 13)) < p
     res = connected_components_grid(jnp.asarray(mask), 4)
@@ -65,9 +71,7 @@ def test_property_random_grids(seed, p):
                                   oracle_components(mask, 4))
 
 
-@given(st.integers(0, 2**31 - 1))
-@settings(max_examples=20, deadline=None)
-def test_property_graph_cc(seed):
+def _check_graph_cc(seed):
     rng = np.random.default_rng(seed)
     n = int(rng.integers(5, 120))
     m = int(rng.integers(0, 4 * n))
@@ -80,6 +84,27 @@ def test_property_graph_cc(seed):
         jnp.asarray(mask), jnp.asarray(senders), jnp.asarray(receivers))
     np.testing.assert_array_equal(
         np.asarray(res.labels), oracle_components_graph(mask, senders, receivers))
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2**31 - 1), st.floats(0.1, 0.9))
+    @settings(max_examples=30, deadline=None)
+    def test_property_random_grids(seed, p):
+        _check_random_grid(seed, p)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_property_graph_cc(seed):
+        _check_graph_cc(seed)
+else:
+    @pytest.mark.parametrize("seed,p", [(s, p) for s in range(5)
+                                        for p in (0.15, 0.4, 0.6, 0.85)])
+    def test_property_random_grids(seed, p):
+        _check_random_grid(seed, p)
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_property_graph_cc(seed):
+        _check_graph_cc(seed)
 
 
 def test_component_sizes():

@@ -115,3 +115,88 @@ def test_distributed_matches_single_device():
                           capture_output=True, text=True, timeout=1200)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "DISTRIBUTED-OK" in proc.stdout
+
+
+# --- N-D block decomposition vs single-device oracles (fast CI job) ----------
+
+_BLOCK_WORKER = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (make_dpc_mesh, distributed_manifold,
+                            distributed_connected_components,
+                            descending_manifold, ascending_manifold,
+                            connected_components_grid, compute_order)
+
+    assert len(jax.devices()) == 8
+
+    failures = []
+    LAYOUTS = [(1,), (2,), (4,), (2, 2), (2, 4), (2, 2, 2)]
+
+    # 3-D grid: every layout, both manifold directions on the 2-D block
+    # lattices, CC at a sparse and a dense mask
+    rng = np.random.default_rng(0)
+    order3 = compute_order(jnp.asarray(rng.standard_normal((8, 8, 6))))
+    ref_d, _ = descending_manifold(order3, 6)
+    ref_a, _ = ascending_manifold(order3, 6)
+    mask_s = jnp.asarray(rng.random((8, 8, 6)) < 0.35)
+    mask_d = jnp.asarray(rng.random((8, 8, 6)) < 0.8)
+    ref_s = connected_components_grid(mask_s, 6)
+    ref_d_cc = connected_components_grid(mask_d, 6)
+    for layout in LAYOUTS:
+        mesh = make_dpc_mesh(layout)
+        got, stats = distributed_manifold(order3, mesh, 6, True)
+        if not (np.asarray(got).ravel() == np.asarray(ref_d).ravel()).all():
+            failures.append(("manifold-desc", layout))
+        if len(layout) > 1:
+            got, _ = distributed_manifold(order3, mesh, 6, False)
+            if not (np.asarray(got).ravel() == np.asarray(ref_a).ravel()).all():
+                failures.append(("manifold-asc", layout))
+        for mask, ref in ((mask_s, ref_s), (mask_d, ref_d_cc)):
+            got, _ = distributed_connected_components(mask, mesh, 6)
+            if not (np.asarray(got) == np.asarray(ref.labels)).all():
+                failures.append(("cc", layout, float(mask.mean())))
+
+    # full Freudenthal stencil (diagonal block-to-block edges) on the
+    # 3-D block lattice
+    mesh = make_dpc_mesh((2, 2, 2))
+    got, _ = distributed_manifold(order3, mesh, 14, True)
+    ref14, _ = descending_manifold(order3, 14)
+    if not (np.asarray(got).ravel() == np.asarray(ref14).ravel()).all():
+        failures.append(("manifold-14", (2, 2, 2)))
+    got, _ = distributed_connected_components(mask_s, mesh, 14)
+    ref14cc = connected_components_grid(mask_s, 14)
+    if not (np.asarray(got) == np.asarray(ref14cc.labels)).all():
+        failures.append(("cc-14", (2, 2, 2)))
+
+    # 2-D grid on a 2-D block lattice, incl. the diagonal 6-stencil
+    order2 = compute_order(jnp.asarray(rng.standard_normal((8, 12))))
+    mesh = make_dpc_mesh((2, 4))
+    got, _ = distributed_manifold(order2, mesh, 6, True)
+    ref2, _ = descending_manifold(order2, 6)
+    if not (np.asarray(got).ravel() == np.asarray(ref2).ravel()).all():
+        failures.append(("manifold-2d", (2, 4)))
+    mask2 = jnp.asarray(rng.random((8, 12)) < 0.6)
+    got, _ = distributed_connected_components(mask2, mesh, 4)
+    ref2cc = connected_components_grid(mask2, 4)
+    if not (np.asarray(got) == np.asarray(ref2cc.labels)).all():
+        failures.append(("cc-2d", (2, 4)))
+
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("BLOCK-OK")
+""")
+
+
+def test_block_decomposition_matches_single_device():
+    """Bit-identical labels vs the single-device oracles across 1-D/2-D/3-D
+    shard layouts on 8 virtualized host devices (fast CI job)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    proc = subprocess.run([sys.executable, "-c", _BLOCK_WORKER], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "BLOCK-OK" in proc.stdout

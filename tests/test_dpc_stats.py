@@ -1,0 +1,104 @@
+"""DPCStats invariants under the block decomposition (fast CI job).
+
+* ghost_bytes equals the closed-form total boundary *surface* of the block
+  lattice — it scales with surface, not volume, when the grid grows;
+* table_iters is bit-identical on every device (all devices compress the
+  same gathered table — the replicated-table invariant the substitution
+  step relies on).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+_WORKER = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import math
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import make_dpc_mesh, distributed_manifold, \\
+        distributed_connected_components, compute_order
+    from repro.core.distributed import _manifold_block, _cc_block, _decomp_for
+    from repro.core._shardmap import shard_map_norep
+
+    assert len(jax.devices()) == 8
+
+    def surface_bytes(grid, layout, itemsize=4):
+        k = len(layout)
+        local = [g // p for g, p in zip(grid, layout)] + list(grid[k:])
+        nb = math.prod(layout)
+        return sum(nb * 2 * (math.prod(local) // local[a]) * itemsize
+                   for a in range(k))
+
+    rng = np.random.default_rng(0)
+
+    # --- ghost_bytes == closed-form boundary surface ----------------------
+    for grid, layout in [((8, 8, 8), (8,)), ((8, 8, 8), (2, 4)),
+                         ((8, 8, 8), (2, 2, 2)), ((8, 12, 6), (4, 2))]:
+        order = compute_order(jnp.asarray(rng.standard_normal(grid)))
+        _, st = distributed_manifold(order, make_dpc_mesh(layout), 6)
+        assert int(st.ghost_bytes) == surface_bytes(grid, layout), \\
+            (grid, layout, int(st.ghost_bytes))
+        mask = jnp.asarray(rng.random(grid) < 0.5)
+        _, st = distributed_connected_components(
+            mask, make_dpc_mesh(layout), 6, gather_mask=True)
+        # labels (4B) + gathered mask (1B) per boundary slot
+        assert int(st.ghost_bytes) == surface_bytes(grid, layout, 5), \\
+            (grid, layout, int(st.ghost_bytes))
+
+    # --- surface (not volume) scaling under grid growth -------------------
+    gb = {}
+    for grid in [(8, 8, 8), (16, 16, 16)]:
+        order = compute_order(jnp.asarray(rng.standard_normal(grid)))
+        _, st = distributed_manifold(order, make_dpc_mesh((2, 2, 2)), 6)
+        gb[grid] = int(st.ghost_bytes)
+    # volume grew 8x; boundary surface (and the ONE comm phase) only 4x
+    assert gb[(16, 16, 16)] == 4 * gb[(8, 8, 8)], gb
+
+    # blocks beat slabs at equal device count (surface-to-volume)
+    order = compute_order(jnp.asarray(rng.standard_normal((8, 8, 8))))
+    _, st_slab = distributed_manifold(order, make_dpc_mesh((8,)), 6)
+    _, st_blk = distributed_manifold(order, make_dpc_mesh((2, 2, 2)), 6)
+    assert int(st_blk.ghost_bytes) < int(st_slab.ghost_bytes)
+
+    # --- table_iters identical across devices -----------------------------
+    grid = (8, 8, 6)
+    order = compute_order(jnp.asarray(rng.standard_normal(grid)))
+    mask = jnp.asarray(rng.random(grid) < 0.6)
+    for layout in [(4, 2), (2, 2, 2)]:
+        mesh = make_dpc_mesh(layout)
+        dec = _decomp_for(mesh, grid)
+        one = (1,) * len(layout)
+        spec = P(*dec.names, *([None] * (len(grid) - dec.k)))
+        tspec = P(*dec.names)
+
+        def man(blk):
+            labels, st = _manifold_block(blk, dec=dec, connectivity=6)
+            return labels, st.table_iters.reshape(one)
+
+        def cc(blk):
+            labels, st = _cc_block(blk, dec=dec, connectivity=6)
+            return labels, st.table_iters.reshape(one)
+
+        for fn, arg in ((man, order), (cc, mask)):
+            _, ti = shard_map_norep(fn, mesh, (spec,),
+                                    (spec, tspec))(arg)
+            ti = np.asarray(ti).ravel()
+            assert (ti == ti[0]).all(), (layout, fn.__name__, ti)
+
+    print("STATS-OK")
+""")
+
+
+def test_dpc_stats_invariants():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    proc = subprocess.run([sys.executable, "-c", _WORKER], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "STATS-OK" in proc.stdout

@@ -1,8 +1,17 @@
-"""Unit + property tests for the pointer-doubling primitive."""
+"""Unit + property tests for the pointer-doubling primitive.
+
+The property tests run under hypothesis when it is installed; otherwise the
+same checks run on a fixed seed sweep (plain parametrized cases), so the
+suite collects and passes in a minimal environment."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import path_compress, jump, is_converged
 
@@ -45,12 +54,10 @@ def test_already_converged():
     assert bool(is_converged(d))
 
 
-@st.composite
-def pointer_forest(draw):
+def _make_forest(n, seed):
     """Random functional forest: d[v] >= v points 'up' toward roots;
     masked (-1) vertices are never pointer targets (the DPC invariant)."""
-    n = draw(st.integers(2, 200))
-    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    rng = np.random.default_rng(seed)
     masked = rng.random(n) < 0.15
     live = np.flatnonzero(~masked)
     d = np.full(n, -1, dtype=np.int64)
@@ -61,20 +68,43 @@ def pointer_forest(draw):
     return d
 
 
-@given(pointer_forest())
-@settings(max_examples=50, deadline=None)
-def test_property_matches_sequential(d):
+def _check_matches_sequential(d):
     out, _ = path_compress(jnp.asarray(d))
     np.testing.assert_array_equal(np.asarray(out), _np_compress(d))
 
 
-@given(pointer_forest())
-@settings(max_examples=25, deadline=None)
-def test_property_idempotent(d):
+def _check_idempotent(d):
     out, _ = path_compress(jnp.asarray(d))
     out2, iters2 = path_compress(out)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
     assert int(iters2) == 1
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def pointer_forest(draw):
+        return _make_forest(draw(st.integers(2, 200)),
+                            draw(st.integers(0, 2**31 - 1)))
+
+    @given(pointer_forest())
+    @settings(max_examples=50, deadline=None)
+    def test_property_matches_sequential(d):
+        _check_matches_sequential(d)
+
+    @given(pointer_forest())
+    @settings(max_examples=25, deadline=None)
+    def test_property_idempotent(d):
+        _check_idempotent(d)
+else:
+    @pytest.mark.parametrize("seed", range(25))
+    def test_property_matches_sequential(seed):
+        n = int(np.random.default_rng(1000 + seed).integers(2, 200))
+        _check_matches_sequential(_make_forest(n, seed))
+
+    @pytest.mark.parametrize("seed", range(10))
+    def test_property_idempotent(seed):
+        n = int(np.random.default_rng(2000 + seed).integers(2, 200))
+        _check_idempotent(_make_forest(n, seed))
 
 
 def test_log_rounds():
