@@ -1,0 +1,72 @@
+"""Worker for the unstructured (graph) CC scaling benchmark: runs under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 in a subprocess.
+Prints CSV rows:  name,us_per_call,derived
+
+Strong scaling over vertex-partition counts {1, 2, 4, 8} on a synthetic
+tet-mesh-style edge list (the Freudenthal tetrahedralization of an edge^3
+grid emitted as a fully unstructured edge list), with the single-device
+`connected_components_graph` as the 1-partition reference and oracle.  The
+derived column carries the cut-table exchange volume (ghost_bytes), the
+comm-phase count (the paper's budget: 1), and the resolution iteration
+counts."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (GraphDecomp, distributed_connected_components_graph,
+                        connected_components_graph, make_dpc_mesh)
+from repro.configs.dpc_graph import SCALING_PARTS
+from repro.data import perlin_noise, grid_edge_list
+
+
+def timeit(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def main():
+    edge = int(sys.argv[1])      # grid edge length; n = edge^3 vertices
+    dims = (edge, edge, edge)
+    n = edge ** 3
+    senders, receivers = grid_edge_list(dims, 14)
+    field = perlin_noise(dims, frequency=0.1, seed=0)
+    mask = jnp.asarray((field > np.quantile(field, 0.9)).ravel())
+    sj, rj = jnp.asarray(senders), jnp.asarray(receivers)
+
+    us, ref = timeit(
+        lambda m: connected_components_graph(m, sj, rj), mask)
+    print(f"tab4_graph_cc_single_{edge},{us:.0f},"
+          f"edges={senders.size};rounds={int(ref.n_rounds)}", flush=True)
+
+    for nparts in SCALING_PARTS:
+        if n % nparts:
+            continue
+        dec = GraphDecomp(n, senders, receivers, nparts)
+        mesh = make_dpc_mesh(nparts)
+        us, (labels, stats) = timeit(
+            lambda m: distributed_connected_components_graph(m, dec, mesh),
+            mask)
+        assert (np.asarray(labels) == np.asarray(ref.labels)).all(), nparts
+        print(f"tab4_graph_cc_{edge}_{nparts}parts,{us:.0f},"
+              f"ghost_bytes={int(stats.ghost_bytes)};"
+              f"comm_phases={int(stats.comm_phases)};"
+              f"table_iters={int(stats.table_iters)};"
+              f"stitch_rounds={int(stats.stitch_rounds)}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,9 @@ microbenches.  Prints ``name,us_per_call,derived`` CSV.
   tab3_threshold      — paper Tab. 3: implicit DPC-CC vs the VTK stand-in
       (label propagation + explicit extraction memory model) at top
       10% / 50% / 90% masks
+  tab4_graph_cc_scaling — paper §5 unstructured path: distributed graph CC
+      over vertex-partition counts {1,2,4,8} of a synthetic tet-mesh edge
+      list vs the single-device oracle
   alg_doubling_vs_wave — the log(d) vs O(d) round-count gap that drives the
       paper's algorithm choice
   kernels             — Pallas hot-spot kernels vs their jnp oracles
@@ -63,6 +66,23 @@ def tab2_weak_scaling(base: int = 48):
     if proc.returncode:
         sys.stderr.write(proc.stderr)
         raise RuntimeError("weak-scaling worker failed")
+
+
+def tab4_graph_cc_scaling(edge: int = 24):
+    """Unstructured CC strong scaling (paper §5, the graph path): vertex
+    partitions {1, 2, 4, 8} of a synthetic tet-mesh edge list vs the
+    single-device oracle; derived columns expose the one-phase cut-table
+    exchange (ghost_bytes / comm_phases)."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    worker = os.path.join(os.path.dirname(__file__), "_graph_cc_worker.py")
+    proc = subprocess.run([sys.executable, worker, str(edge)],
+                          env=env, capture_output=True, text=True,
+                          timeout=3600)
+    sys.stdout.write(proc.stdout)
+    if proc.returncode:
+        sys.stderr.write(proc.stderr)
+        raise RuntimeError("graph-CC scaling worker failed")
 
 
 def tab3_threshold(edge: int = 96):
@@ -175,6 +195,8 @@ _BENCHES = {
     "lm_train_microbench": (lm_train_microbench, {}, {}),
     "tab1_strong_scaling": (tab1_strong_scaling, {"base": 64}, {"base": 16}),
     "tab2_weak_scaling": (tab2_weak_scaling, {"base": 32}, {"base": 8}),
+    "tab4_graph_cc_scaling": (tab4_graph_cc_scaling, {"edge": 24},
+                              {"edge": 8}),
 }
 
 

@@ -1,0 +1,66 @@
+"""Distributed unstructured CC: the paper's graph path in 60 seconds.
+
+Builds a synthetic tet-mesh-style edge list (the Freudenthal
+tetrahedralization of a Perlin-noise grid, treated as a fully unstructured
+mesh), labels the thresholded connected components on one device, then
+vertex-partitions the mesh over every local device with GraphDecomp and
+checks the distributed labels are bit-identical — with exactly one
+all_gather communication phase (paper Alg. 2's budget).
+
+  PYTHONPATH=src python examples/graph_cc.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (GraphDecomp, distributed_connected_components_graph,
+                        connected_components_graph, make_dpc_mesh)
+from repro.data import perlin_noise, grid_edge_list
+
+
+def main():
+    # --- the mesh: a tet-mesh-style edge list over a Perlin field ----------
+    shape = (16, 16, 16)
+    n = int(np.prod(shape))
+    senders, receivers = grid_edge_list(shape, connectivity=14)
+    field = perlin_noise(shape, frequency=0.1, seed=42)
+    mask = jnp.asarray((field > np.quantile(field, 0.9)).ravel())
+    print(f"tet-style mesh: {n} vertices, {senders.size} directed edges, "
+          f"{int(mask.sum())} masked (top 10%)")
+
+    # --- single-device oracle (paper Alg. 3 on graphs) ---------------------
+    ref = connected_components_graph(mask, jnp.asarray(senders),
+                                     jnp.asarray(receivers))
+    labels = np.asarray(ref.labels)
+    n_comp = len(np.unique(labels[labels >= 0]))
+    print(f"single device: {n_comp} components "
+          f"({int(ref.n_rounds)} stitch rounds)")
+
+    # --- distributed: vertex partition over all local devices --------------
+    n_dev = len(jax.devices())
+    nparts = max(d for d in range(1, n_dev + 1) if n % d == 0)
+    dec = GraphDecomp(n, senders, receivers, nparts)
+    mesh = make_dpc_mesh(nparts)
+    got, stats = distributed_connected_components_graph(mask, dec, mesh)
+    assert (np.asarray(got) == labels).all(), "labels must be bit-identical"
+    print(f"distributed over {nparts} partition(s): identical labels; "
+          f"{int(stats.comm_phases)} all_gather phase, "
+          f"{int(stats.ghost_bytes):,} cut-table bytes, "
+          f"{int(stats.table_iters)} table rounds")
+
+    # --- pure geometry (no scalar data): mask = ones -----------------------
+    ones = jnp.ones(n, bool)
+    g_ref = connected_components_graph(ones, jnp.asarray(senders),
+                                       jnp.asarray(receivers))
+    g_got, _ = distributed_connected_components_graph(ones, dec, mesh)
+    assert (np.asarray(g_got) == np.asarray(g_ref.labels)).all()
+    print("pure-geometry CC (mask=ones): identical labels")
+
+
+if __name__ == "__main__":
+    main()

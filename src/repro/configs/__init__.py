@@ -11,8 +11,9 @@ ARCH_IDS = [
     "gat_cora", "schnet", "meshgraphnet", "dimenet",
     # RecSys (1)
     "bst",
-    # the paper's own workload
+    # the paper's own workloads (structured grid + unstructured graph)
     "dpc_grid",
+    "dpc_graph",
 ]
 
 _ALIAS = {i.replace("_", "-"): i for i in ARCH_IDS}

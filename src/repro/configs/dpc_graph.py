@@ -1,0 +1,58 @@
+"""dpc-graph — the paper's *unstructured* workload: distributed connected
+components on edge-list meshes (paper §5: CC "in distributed structured and
+unstructured grids, based either on the connectivity of the underlying mesh
+or a feature mask").
+
+Two mesh families:
+  * tet_* / geometry_* — the Kuhn/Freudenthal tetrahedralization of an n^3
+    grid emitted as a fully unstructured edge list (connectivity 14), i.e.
+    a synthetic tet mesh with a known oracle; `geometry_*` runs the
+    mask=ones pure-geometry variant (no scalar data);
+  * random_* — random sparse graphs (the adversarial partition-adjacency
+    case: every partition may touch every other).
+
+The vertex partition is 1-D (contiguous global-id blocks over the
+flattened device mesh); vertex counts are multiples of 512 so the same
+cell lowers on both production meshes.
+"""
+import dataclasses
+
+FAMILY = "dpc_graph"
+
+
+@dataclasses.dataclass(frozen=True)
+class DPCGraphConfig:
+    name: str = "dpc-graph"
+    connectivity: int = 14            # Freudenthal/tet edge set (3-D grids)
+    threshold_quantile: float = 0.9   # paper's "top 10%" feature mask
+    arch: str = "dpc_graph"
+    # §Perf (DESIGN.md): drop the redundant mask all_gather (M = T >= 0)
+    gather_mask: bool = True
+
+
+SHAPES = {
+    "tet_64": {"kind": "graph_cc", "dims": (64, 64, 64)},
+    "tet_32": {"kind": "graph_cc", "dims": (32, 32, 32)},
+    "geometry_32": {"kind": "graph_cc", "dims": (32, 32, 32),
+                    "geometry": True},
+    "random_1m": {"kind": "graph_cc_random", "n": 1 << 20, "avg_degree": 8},
+}
+
+# smoke vertex counts stay divisible by the 256/512-way flat meshes
+SMOKE_SHAPES = {
+    "tet_64": {"kind": "graph_cc", "dims": (8, 8, 8)},
+    "tet_32": {"kind": "graph_cc", "dims": (8, 8, 8)},
+    "geometry_32": {"kind": "graph_cc", "dims": (8, 8, 8), "geometry": True},
+    "random_1m": {"kind": "graph_cc_random", "n": 4096, "avg_degree": 8},
+}
+
+# partition counts exercised by the graph-CC strong-scaling benchmark
+SCALING_PARTS = (1, 2, 4, 8)
+
+
+def full_config() -> DPCGraphConfig:
+    return DPCGraphConfig()
+
+
+def smoke_config() -> DPCGraphConfig:
+    return DPCGraphConfig(name="dpc-graph-smoke")

@@ -15,6 +15,8 @@ from .distributed import (distributed_manifold,
                           distributed_connected_components,
                           make_dpc_mesh, BlockDecomp, DPCStats, AXIS,
                           BLOCK_AXES)
+from .distributed_graph import (distributed_connected_components_graph,
+                                GraphDecomp, GraphDPCStats)
 
 __all__ = [
     "compute_order", "inverse_permutation", "flat_ids", "compact_labels",
@@ -28,4 +30,5 @@ __all__ = [
     "label_propagation_grid", "extract_masked_edges",
     "distributed_manifold", "distributed_connected_components",
     "make_dpc_mesh", "BlockDecomp", "DPCStats", "AXIS", "BLOCK_AXES",
+    "distributed_connected_components_graph", "GraphDecomp", "GraphDPCStats",
 ]

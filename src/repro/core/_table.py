@@ -1,0 +1,112 @@
+"""Shared machinery for the gathered-boundary-table phase (paper Alg. 2).
+
+Both distributed backends — the N-D block decomposition of structured grids
+(`distributed.py`) and the vertex partition of unstructured edge-list meshes
+(`distributed_graph.py`) — end their local phase with ONE all_gather of owned
+boundary/cut labels into a replicated flat table, then resolve cross-shard
+segments by post-processing that table identically on every device.  The
+post-processing is backend-agnostic once two lookups are fixed:
+
+  * how a *label value* maps to its table slot (coordinate arithmetic for
+    blocks, a sorted-gid search for graphs) — a `lookup` closure;
+  * which table slots are adjacent across shard cuts — a `cut_max` closure.
+
+This module holds the backend-independent pieces: the pointer-doubling chase
+(Alg. 2 lines 15-25), the equal-label group machinery and hook+propagate
+fixpoint of deviation (d2) in DESIGN.md, and the value-search substitution
+(Alg. 2 lines 27-33 generalised to merged labels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def pointer_chase(T, lookup, max_iter: int = 64):
+    """Pointer doubling on the gathered flat table (Alg. 2 lines 15-25).
+
+    `lookup(t)` maps every entry of the current table `t` through the table
+    itself (entry value -> slot -> entry at that slot), leaving unresolvable
+    entries (unmasked `< 0`, non-boundary targets) fixed.  Iterates to the
+    fixpoint; returns (compressed table, rounds executed).
+    """
+    def cond(s):
+        _, ch, i = s
+        return ch & (i < max_iter)
+
+    def body(s):
+        t, _, i = s
+        nt = lookup(t)
+        return nt, jnp.any(nt != t), i + jnp.int32(1)
+
+    T, _, iters = lax.while_loop(cond, body,
+                                 (T, jnp.asarray(True), jnp.int32(0)))
+    return T, iters
+
+
+def make_group_max(Tstar):
+    """Equal-label group structure of a compressed table.
+
+    Slots sharing a label after the chase belong to the same (partial)
+    component; groups are realised as runs of the sorted table so a group
+    reduction is one `segment_max` (sorted-runs trick, no hash table).
+    Returns (group_max fn, perm, sorted_vals); the latter two also drive the
+    final value-search substitution.
+    """
+    msize = Tstar.size
+    perm = jnp.argsort(Tstar)
+    sorted_vals = Tstar[perm]
+    run_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_vals[1:] != sorted_vals[:-1]])
+    run_id = jnp.cumsum(run_start) - 1
+    inv_perm = jnp.zeros(msize, dtype=jnp.int32).at[perm].set(
+        jnp.arange(msize, dtype=jnp.int32))
+
+    def group_max(L):
+        gm = jax.ops.segment_max(L[perm], run_id, num_segments=msize)
+        return gm[run_id][inv_perm]
+
+    return group_max, perm, sorted_vals
+
+
+def hook_propagate(Tstar, cut_max, group_max, max_iter: int = 64):
+    """Hook + propagate fixpoint on the compressed table (deviation (d2) in
+    DESIGN.md): alternate `cut_max` (max across masked cut edges between
+    table slots) and `group_max` (max within equal-original-label groups)
+    until no label changes.  Computes, per slot, the largest label of its
+    *global* component.  The paper compresses the ghost table with path
+    compression only; that cannot *merge* components whose local roots are
+    interior vertices — this fixpoint can, and stays within the paper's
+    single-communication-phase budget (it only post-processes the
+    already-gathered table).
+    """
+    def cond(st):
+        _, ch, i = st
+        return ch & (i < max_iter)
+
+    def body(st):
+        L, _, i = st
+        nxt = group_max(cut_max(L))
+        return nxt, jnp.any(nxt != L), i + jnp.int32(1)
+
+    L, _, iters = lax.while_loop(
+        cond, body, (Tstar, jnp.asarray(True), jnp.int32(0)))
+    return L, iters
+
+
+def value_substitute(o, chased, sorted_vals, g_sorted):
+    """Final substitution for CC (Alg. 2 lines 27-33 generalised): take each
+    owned label `chased` through the table, then adopt its equal-label
+    group's propagated maximum, found by *value* (searchsorted over the
+    sorted table) — by value because an owned label can name an interior
+    root that is not itself a table slot but shares its value with cut
+    vertices of the same local piece.  `o` is the pre-chase label; `< 0`
+    (unmasked) entries stay -1.
+    """
+    idx = jnp.clip(jnp.searchsorted(sorted_vals, chased),
+                   0, sorted_vals.shape[0] - 1)
+    found = sorted_vals[idx] == chased
+    improved = jnp.where(found & (chased >= 0),
+                         jnp.maximum(g_sorted[idx], chased), chased)
+    return jnp.where(o < 0, -1, improved)

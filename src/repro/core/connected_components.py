@@ -110,7 +110,9 @@ def connected_components_graph(mask: jax.Array, senders: jax.Array,
 def component_sizes(labels: jax.Array, num_segments: int | None = None):
     """Histogram of component sizes keyed by root id (unmasked dropped)."""
     flat = labels.ravel()
-    n = num_segments or flat.shape[0]
+    # `is None`, not truthiness: an explicit num_segments=0 (empty label
+    # space) must yield an empty histogram, not fall back to flat.shape[0]
+    n = flat.shape[0] if num_segments is None else num_segments
     seg = jnp.where(flat >= 0, flat, n)  # park unmasked in a dropped bucket
     return jax.ops.segment_sum(
         jnp.ones_like(flat), seg, num_segments=n + 1

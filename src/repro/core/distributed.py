@@ -53,6 +53,8 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ._shardmap import shard_map_norep
+from ._table import (pointer_chase, make_group_max, hook_propagate,
+                     value_substitute)
 from .steepest import (grid_steepest, grid_mask_argmax, neighbor_offsets,
                        shift_fill)
 from .pathcompress import path_compress
@@ -279,24 +281,15 @@ def _gather_table(owned, dec: BlockDecomp):
 
 def _table_compress(T, dec: BlockDecomp, max_iter=64):
     """Pointer doubling on the gathered flat table (Alg. 2 lines 15-25).
-    Entries < 0 (unmasked, CC only) and non-boundary targets are fixed."""
+    Entries < 0 (unmasked, CC only) and non-boundary targets are fixed.
+    The slot lookup is pure coordinate arithmetic (boundary_pos); the chase
+    itself is the shared backend-agnostic loop in core/_table.py."""
     def lookup(t):
         is_b, pos = dec.boundary_pos(jnp.clip(t, 0), jnp)
         tv = t[jnp.clip(pos, 0, t.size - 1)]
         return jnp.where((t >= 0) & is_b, tv, t)
 
-    def cond(s):
-        _, ch, i = s
-        return ch & (i < max_iter)
-
-    def body(s):
-        t, _, i = s
-        nt = lookup(t)
-        return nt, jnp.any(nt != t), i + jnp.int32(1)
-
-    T, _, iters = lax.while_loop(cond, body,
-                                 (T, jnp.asarray(True), jnp.int32(0)))
-    return T, iters
+    return pointer_chase(T, lookup, max_iter)
 
 
 # --- MS manifolds ------------------------------------------------------------
@@ -405,19 +398,11 @@ def _table_propagate(Tstar, Mflat, dec: BlockDecomp, connectivity,
       (b) max within equal-original-label groups (sorted-runs segment_max).
     Computes, for every boundary slot, the largest label of its global
     component.  Deviation (d2): the paper's path compression alone cannot
-    perform these merges."""
+    perform these merges.  The group machinery and the fixpoint loop are
+    shared with the unstructured backend (core/_table.py); only `cut_max`
+    — slot adjacency by coordinate arithmetic — is block-specific."""
     msize = Tstar.size
-    perm = jnp.argsort(Tstar)
-    sorted_vals = Tstar[perm]
-    run_start = jnp.concatenate(
-        [jnp.ones((1,), bool), sorted_vals[1:] != sorted_vals[:-1]])
-    run_id = jnp.cumsum(run_start) - 1
-    inv_perm = jnp.zeros(msize, dtype=jnp.int32).at[perm].set(
-        jnp.arange(msize, dtype=jnp.int32))
-
-    def group_max(L):
-        gm = jax.ops.segment_max(L[perm], run_id, num_segments=msize)
-        return gm[run_id][inv_perm]
+    group_max, perm, sorted_vals = make_group_max(Tstar)
 
     coords = dec.slot_coords()
     grid = jnp.asarray(dec.grid, dtype=jnp.int32)
@@ -439,17 +424,7 @@ def _table_propagate(Tstar, Mflat, dec: BlockDecomp, connectivity,
             best = jnp.where(Mflat & nm, jnp.maximum(best, nl), best)
         return best
 
-    def cond(st):
-        _, ch, i = st
-        return ch & (i < max_iter)
-
-    def body(st):
-        L, _, i = st
-        nxt = group_max(cut_max(L))
-        return nxt, jnp.any(nxt != L), i + jnp.int32(1)
-
-    L, _, iters = lax.while_loop(
-        cond, body, (Tstar, jnp.asarray(True), jnp.int32(0)))
+    L, iters = hook_propagate(Tstar, cut_max, group_max, max_iter)
     return L, (perm, sorted_vals), iters
 
 
@@ -495,13 +470,7 @@ def _cc_block(mask_blk, *, dec: BlockDecomp, connectivity,
     is_b, pos = dec.boundary_pos(jnp.clip(o, 0), jnp)
     chased = jnp.where((o >= 0) & is_b,
                        Tstar[jnp.clip(pos, 0, Tstar.size - 1)], o)
-    idx_c = jnp.clip(jnp.searchsorted(sorted_vals, chased),
-                     0, sorted_vals.shape[0] - 1)
-    found = sorted_vals[idx_c] == chased
-    g_sorted = G[perm]
-    improved = jnp.where(found & (chased >= 0),
-                         jnp.maximum(g_sorted[idx_c], chased), chased)
-    final = jnp.where(o < 0, -1, improved)
+    final = value_substitute(o, chased, sorted_vals, G[perm])
 
     stats = DPCStats(
         local_iters=lax.pmax(local_iters, dec.names),

@@ -123,13 +123,25 @@ def graph_steepest(order: jax.Array, senders: jax.Array, receivers: jax.Array,
 
 
 def graph_mask_argmax(mask: jax.Array, senders: jax.Array,
-                      receivers: jax.Array) -> jax.Array:
+                      receivers: jax.Array,
+                      ghost: jax.Array | None = None) -> jax.Array:
     """CC pointer init on an edge-list graph; -1 for unmasked vertices.
-    Edges incident to unmasked vertices are ignored (paper Alg. 3)."""
+    Edges incident to unmasked vertices are ignored (paper Alg. 3).
+
+    `ghost` (optional bool array) marks one-ring ghost vertices of a
+    distributed vertex partition: masked ghosts pretend to be roots (point
+    to themselves) exactly like the ghost layer of the structured backend
+    (paper Alg. 1 lines 6-8) — their true pointer is resolved later through
+    the gathered boundary table.  Owned vertices may still point *at* a
+    ghost, which is what carries cross-partition chains into the table.
+    """
     n = mask.shape[0]
     ids = jnp.arange(n, dtype=jnp.int32)
     key = jnp.where(mask, ids, -1)
     edge_val = jnp.where(mask[senders] & mask[receivers], key[receivers], -1)
     neigh = jax.ops.segment_max(edge_val, senders, num_segments=n)
     best = jnp.maximum(jnp.maximum(neigh, key), -1)
-    return jnp.where(mask, best, -1)
+    out = jnp.where(mask, best, -1)
+    if ghost is not None:
+        out = jnp.where(ghost & mask, ids, out)
+    return out

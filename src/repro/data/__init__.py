@@ -1,1 +1,4 @@
 from .perlin import perlin_noise
+from .graphs import grid_edge_list
+
+__all__ = ["perlin_noise", "grid_edge_list"]

@@ -14,6 +14,32 @@ import numpy as np
 # --- synthetic graphs --------------------------------------------------------
 
 
+def grid_edge_list(shape, connectivity: int):
+    """Edge list of a structured grid's implicit triangulation, emitted as an
+    unstructured mesh: with connectivity 14 on a 3-D shape this is exactly
+    the edge set of the Kuhn/Freudenthal tetrahedralization (TTK's implicit
+    triangulation), i.e. a synthetic tet-mesh-style edge list for the
+    distributed graph-CC path.  Returns (senders, receivers) with BOTH
+    directions of every undirected edge (the repo-wide graph convention).
+    """
+    from repro.core.steepest import neighbor_offsets
+    offs = neighbor_offsets(len(shape), connectivity)
+    idx = np.arange(int(np.prod(shape)), dtype=np.int64).reshape(shape)
+    send, recv = [], []
+    for off in offs:
+        src_sl, dst_sl = [], []
+        for o, sz in zip(off, shape):
+            if o >= 0:
+                src_sl.append(slice(0, sz - o))
+                dst_sl.append(slice(o, sz))
+            else:
+                src_sl.append(slice(-o, sz))
+                dst_sl.append(slice(0, sz + o))
+        send.append(idx[tuple(src_sl)].ravel())
+        recv.append(idx[tuple(dst_sl)].ravel())
+    return np.concatenate(send), np.concatenate(recv)
+
+
 def random_csr(n_nodes: int, avg_degree: int, seed: int = 0):
     """Undirected random graph in CSR form (deterministic)."""
     rng = np.random.default_rng(seed)

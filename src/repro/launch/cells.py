@@ -349,10 +349,49 @@ def build_dpc_cell(arch_id, mod, shape_name, shape, mesh, smoke) -> Cell:
                 (inp,), (sh,), note=note)
 
 
+def build_dpc_graph_cell(arch_id, mod, shape_name, shape, mesh, smoke) -> Cell:
+    """Distributed CC on an unstructured edge-list mesh: a 1-D vertex
+    partition over the flattened device mesh (DESIGN.md §5; the partition
+    geometry is table-driven, so no block lattice applies)."""
+    from repro.core import (GraphDecomp,
+                            distributed_connected_components_graph)
+    from repro.data import grid_edge_list
+    from repro.data.graphs import random_csr
+    cfg = mod.smoke_config() if smoke else mod.full_config()
+    if shape["kind"] == "graph_cc":
+        n = math.prod(shape["dims"])
+        senders, receivers = grid_edge_list(shape["dims"], cfg.connectivity)
+    else:  # graph_cc_random
+        n = shape["n"]
+        indptr, receivers = random_csr(n, shape["avg_degree"], seed=0)
+        senders = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    dpc_mesh = make_flat_mesh(mesh)
+    ndev = int(dpc_mesh.devices.size)
+    dec = GraphDecomp(n, senders, receivers, ndev)
+    inp = S((n,), jnp.bool_)
+    sh = NamedSharding(dpc_mesh, P())   # global mask; ghosts ride the scatter
+    geometry = bool(shape.get("geometry", False))
+
+    def step(mask):
+        # pure-geometry shapes label the mesh connectivity itself (paper:
+        # CC "computed on pure geometry without any scalar data")
+        if geometry:
+            mask = jnp.ones_like(mask)
+        return distributed_connected_components_graph(
+            mask, dec, dpc_mesh, gather_mask=getattr(cfg, "gather_mask",
+                                                     True))
+
+    return Cell(arch_id, shape_name, "dpc_graph", cfg, shape, step,
+                (inp,), (sh,),
+                note=f"{ndev}-way vertex partition, "
+                     f"{dec.table_size}-slot cut table")
+
+
 # --- registry -----------------------------------------------------------------
 
 _BUILDERS = {"lm": build_lm_cell, "gnn": build_gnn_cell,
-             "recsys": build_bst_cell, "dpc": build_dpc_cell}
+             "recsys": build_bst_cell, "dpc": build_dpc_cell,
+             "dpc_graph": build_dpc_graph_cell}
 
 
 def build_cell(arch_id: str, shape_name: str, mesh: Mesh,
@@ -390,7 +429,7 @@ def all_cells(include_dpc: bool = True):
     """The full assignment matrix: 10 archs x 4 shapes (+ DPC cells)."""
     out = []
     for arch in configs.ARCH_IDS:
-        if arch == "dpc_grid" and not include_dpc:
+        if arch in ("dpc_grid", "dpc_graph") and not include_dpc:
             continue
         mod = configs.get(arch)
         for shape_name in mod.SHAPES:

@@ -85,6 +85,8 @@ def run_cell(arch, shape_name, mesh, mesh_label, smoke, out_dir,
         t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # pre-0.4.31 jax: one dict per program
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     rec = {
         "cell": cell.name, "mesh": mesh_label,

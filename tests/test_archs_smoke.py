@@ -127,8 +127,32 @@ def test_dpc_grid_smoke():
     assert (labels[~np.asarray(mask)] == -1).all()
 
 
+def test_dpc_graph_cell_smoke():
+    """The unstructured workload's *launcher* path: build_dpc_graph_cell
+    must construct (GraphDecomp + edge-list synthesis) and run a real step
+    on the local smoke mesh for every shape — so a cell regression is
+    caught per-PR, not in the nightly dryrun."""
+    from repro.launch.cells import build_cell
+    from repro.launch.mesh import make_smoke_mesh
+    mesh = make_smoke_mesh()
+    rng = np.random.default_rng(0)
+    for shape_name in configs.get("dpc_graph").SMOKE_SHAPES:
+        cell = build_cell("dpc_graph", shape_name, mesh, smoke=True)
+        n = cell.arg_shapes[0].shape[0]
+        mask = jnp.asarray(rng.random(n) < 0.5)
+        labels, stats = cell.step_fn(mask)
+        labels = np.asarray(labels)
+        assert labels.shape == (n,)
+        if cell.shape.get("geometry"):
+            assert (labels >= 0).all()       # mask=ones: everything labeled
+        else:
+            assert (labels[~np.asarray(mask)] == -1).all()
+            assert (labels[np.asarray(mask)] >= 0).all()
+        assert int(stats.comm_phases) <= 1
+
+
 def test_all_archs_registered():
-    assert len(configs.ARCH_IDS) == 11  # 10 assigned + dpc_grid
+    assert len(configs.ARCH_IDS) == 12  # 10 assigned + dpc_grid + dpc_graph
     for arch in configs.ARCH_IDS:
         mod = configs.get(arch)
         assert hasattr(mod, "FAMILY")

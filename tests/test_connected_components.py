@@ -119,6 +119,16 @@ def test_component_sizes():
     assert sizes.sum() == 3
 
 
+def test_component_sizes_explicit_num_segments():
+    labels = jnp.asarray([-1, 2, 2, 0])
+    sizes = np.asarray(component_sizes(labels, num_segments=4))
+    assert sizes.shape == (4,)
+    assert sizes[2] == 2 and sizes[0] == 1 and sizes.sum() == 3
+    # an explicit num_segments=0 means an empty histogram — it must not be
+    # treated as unset (truthiness bug) and fall back to labels.size
+    assert np.asarray(component_sizes(labels, num_segments=0)).shape == (0,)
+
+
 def test_perlin_threshold_cc_matches_baseline():
     """DPC-CC == label-propagation baseline (the VTK stand-in) on the
     paper's Perlin workload; DPC needs far fewer rounds (log vs diameter)."""

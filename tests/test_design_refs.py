@@ -1,0 +1,77 @@
+"""DESIGN.md must stay the single source of truth for deviations: every
+reference in the source tree ("deviation (x) in DESIGN.md", "DESIGN.md §Y")
+must resolve to a heading, so the catalog can never dangle again (it was
+referenced for two PRs before it existed)."""
+import os
+import re
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+_DESIGN = os.path.join(_ROOT, "DESIGN.md")
+
+_DEVIATION_RE = re.compile(r"[Dd]eviation \(([a-z][0-9]?)\)")
+_SECTION_RE = re.compile(r"DESIGN\.md §([A-Za-z0-9_-]+)")
+
+
+def _py_files():
+    for base in ("src", "tests", "benchmarks", "examples"):
+        for dirpath, _, files in os.walk(os.path.join(_ROOT, base)):
+            if "__pycache__" in dirpath:
+                continue
+            for f in files:
+                # skip this checker itself (its docstrings name the ref
+                # *patterns*, which are not real references)
+                if f.endswith(".py") and f != "test_design_refs.py":
+                    yield os.path.join(dirpath, f)
+
+
+def _collect_refs():
+    deviations, sections = set(), set()
+    for path in _py_files():
+        with open(path) as f:
+            text = f.read()
+        deviations.update(_DEVIATION_RE.findall(text))
+        sections.update(_SECTION_RE.findall(text))
+    return deviations, sections
+
+
+def test_design_md_exists():
+    assert os.path.exists(_DESIGN), "DESIGN.md is referenced but missing"
+
+
+def test_all_deviation_refs_resolve():
+    with open(_DESIGN) as f:
+        design = f.read()
+    deviations, sections = _collect_refs()
+    assert deviations, "sanity: the tree references at least one deviation"
+    missing = [x for x in sorted(deviations)
+               if not re.search(rf"^## Deviation \({re.escape(x)}\)",
+                                design, re.M)]
+    assert not missing, (f"deviation(s) {missing} referenced in the tree "
+                         "but not cataloged as '## Deviation (x)' headings "
+                         "in DESIGN.md")
+    missing = [s for s in sorted(sections)
+               if not re.search(rf"^## §{re.escape(s)}\b", design, re.M)]
+    assert not missing, (f"section(s) {missing} referenced as 'DESIGN.md §…' "
+                         "but missing '## §…' headings in DESIGN.md")
+
+
+def test_designmd_mentions_resolve_near_reference():
+    """Any line mentioning DESIGN.md together with a deviation letter or §
+    token must use a token that resolves (guards against typo'd letters on
+    the same line as the DESIGN.md pointer)."""
+    with open(_DESIGN) as f:
+        design = f.read()
+    bad = []
+    for path in _py_files():
+        with open(path) as f:
+            for ln, line in enumerate(f, 1):
+                if "DESIGN.md" not in line:
+                    continue
+                for x in _DEVIATION_RE.findall(line):
+                    if not re.search(rf"^## Deviation \({re.escape(x)}\)",
+                                     design, re.M):
+                        bad.append((path, ln, f"deviation ({x})"))
+                for s in _SECTION_RE.findall(line):
+                    if not re.search(rf"^## §{re.escape(s)}\b", design, re.M):
+                        bad.append((path, ln, f"§{s}"))
+    assert not bad, f"dangling DESIGN.md references: {bad}"

@@ -1,0 +1,99 @@
+"""int64 id path (ROADMAP open item): grids/graphs with >= 2**31 vertices
+must take int64 global ids under `jax_enable_x64` and refuse loudly without
+it — never wrap silently.  Exercised on synthetic small-extent/large-stride
+decompositions whose *flat ids* overflow int32 without ever allocating a
+real >= 2048^3 array (the id maps are closed-form / table-sized)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core import BlockDecomp, GraphDecomp
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_block_decomp_refuses_int64_without_x64():
+    import jax
+    assert not jax.config.jax_enable_x64  # test-process invariant
+    with pytest.raises(ValueError, match="jax_enable_x64"):
+        BlockDecomp((2048, 2048, 2048), (2,), ("shards",))
+
+
+def test_graph_decomp_refuses_int64_without_x64():
+    import jax
+    assert not jax.config.jax_enable_x64
+    with pytest.raises(ValueError, match="jax_enable_x64"):
+        GraphDecomp(2**31, [], [], 2)
+
+
+def test_int32_grids_keep_int32_ids():
+    import jax.numpy as jnp
+    dec = BlockDecomp((8, 8, 8), (2,), ("shards",))
+    assert dec.id_dtype == jnp.int32
+
+
+_X64_WORKER = textwrap.dedent("""
+    import os
+    os.environ["JAX_ENABLE_X64"] = "1"
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import BlockDecomp
+
+    assert jax.config.jax_enable_x64
+
+    # A: 3-D grid of 2**32 vertices, slab layout: ids span the int32 cliff
+    dec = BlockDecomp((2**20, 2**7, 2**5), (4,), ("shards",))
+    assert dec.id_dtype == jnp.int64
+    assert dec.size == 2**32
+    coords = dec.slot_coords(np).astype(np.int64)
+    g = (coords * np.asarray(dec.stride, np.int64)).sum(axis=1)
+    assert g.max() > 2**31, "table must contain post-int32 ids"
+    is_b, pos = dec.boundary_pos(g, np)
+    assert is_b.all(), "every table slot is a boundary vertex"
+    assert (pos == np.arange(dec.table_size)).all(), "slot round-trip"
+    # interior vertices (strictly inside a block along the cut axis) are
+    # not boundary, even with ids past 2**31
+    xs0 = np.array([5, dec.local[0] + 7, 3 * dec.local[0] + 2], np.int64)
+    interior = xs0 * dec.stride[0] + 3 * dec.stride[1] + 2
+    is_b, _ = dec.boundary_pos(interior, np)
+    assert not is_b.any()
+
+    # B: 2-D grid of 2**32 vertices, 2x2 block lattice: block corners must
+    # canonicalise to the lowest decomposed axis
+    dec2 = BlockDecomp((2**16, 2**16), (2, 2), ("bx", "by"))
+    assert dec2.id_dtype == jnp.int64
+    c2 = dec2.slot_coords(np).astype(np.int64)
+    g2 = (c2 * np.asarray(dec2.stride, np.int64)).sum(axis=1)
+    is_b2, pos2 = dec2.boundary_pos(g2, np)
+    assert is_b2.all()
+    # corner slots appear under BOTH axes' faces; boundary_pos must map the
+    # axis-1 copies back to their canonical axis-0 slot
+    slots = np.arange(dec2.table_size)
+    ax0 = slots < dec2.face_offset[1]
+    assert (pos2[ax0] == slots[ax0]).all()
+    L0, L1 = dec2.local
+    on_ax0 = (c2[:, 0] % L0 == 0) | (c2[:, 0] % L0 == L0 - 1)
+    dup = ~ax0 & on_ax0            # axis-1 slot of an axis-0 boundary vertex
+    assert dup.any()
+    assert (pos2[dup] < dec2.face_offset[1]).all(), "canonicalised to axis 0"
+    assert (pos2[~ax0 & ~on_ax0] == slots[~ax0 & ~on_ax0]).all()
+    assert g2.max() == 2**32 - 1   # the global corner sits in the table
+
+    print("X64-OK")
+""")
+
+
+@pytest.mark.parametrize("mode", ["x64"])
+def test_int64_ids_under_x64(mode):
+    """Subprocess: the x64 flag is global, so the int64 assertions must not
+    leak into this (x64-off) test process."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    proc = subprocess.run([sys.executable, "-c", _X64_WORKER], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "X64-OK" in proc.stdout
