@@ -4,7 +4,10 @@ Prints CSV rows:  name,us_per_call,derived
 
 Covers 1-D slab layouts and 2-D/3-D block layouts at equal device counts,
 so the strong/weak tables expose the surface-to-volume gain of the block
-decomposition (ghost_bytes column)."""
+decomposition (ghost_bytes column).  The requested size is used verbatim —
+an edge length or an exact "XxYxZ" extent; shapes that do not divide a
+layout run the pad-and-mask path (deviation (p) in DESIGN.md) and the
+derived column reports the per-block pad fraction."""
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -34,15 +37,26 @@ def timeit(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6, out
 
 
+def _parse_size(spec: str):
+    """"97x61x43" -> (97, 61, 43); a bare edge length -> a cube."""
+    if "x" in spec:
+        dims = tuple(int(t) for t in spec.split("x"))
+        if len(dims) != 3:
+            sys.exit(f"--size must be an edge length or XxYxZ, got {spec!r}")
+        return dims
+    return (int(spec),) * 3
+
+
 def main():
     mode = sys.argv[1]           # "strong" | "weak"
-    base = int(sys.argv[2])      # grid edge length (strong) / per-block (weak)
+    base = sys.argv[2]           # grid size (strong) / per-block (weak),
+    base_dims = _parse_size(base)  # verbatim — never rounded to divisible
     for layout in SCALING_LAYOUTS:
         pads = layout + (1,) * (3 - len(layout))
         if mode == "strong":
-            dims = (base, base, base)
+            dims = base_dims
         else:  # weak scaling: volume grows with the block lattice
-            dims = tuple(base * p for p in pads)
+            dims = tuple(b * p for b, p in zip(base_dims, pads))
         field = perlin_noise(dims, frequency=0.1, seed=0)
         order = compute_order(jnp.asarray(field))
         mask = jnp.asarray(field > np.quantile(field, 0.9))
@@ -55,14 +69,16 @@ def main():
         print(f"{tab}_{mode}_seg_{base}_{tag}blocks,{us:.0f},"
               f"ghost_bytes={int(stats.ghost_bytes)};"
               f"local_iters={int(stats.local_iters)};"
-              f"table_iters={int(stats.table_iters)}", flush=True)
+              f"table_iters={int(stats.table_iters)};"
+              f"pad_frac={float(stats.pad_fraction):.4f}", flush=True)
 
         us, (labels, stats) = timeit(
             lambda m: distributed_connected_components(m, mesh, 6), mask)
         print(f"{tab}_{mode}_cc_{base}_{tag}blocks,{us:.0f},"
               f"ghost_bytes={int(stats.ghost_bytes)};"
               f"masked_frac={float(stats.masked_ghost_fraction):.4f};"
-              f"stitch_rounds={int(stats.stitch_rounds)}", flush=True)
+              f"stitch_rounds={int(stats.stitch_rounds)};"
+              f"pad_frac={float(stats.pad_fraction):.4f}", flush=True)
 
 
 if __name__ == "__main__":

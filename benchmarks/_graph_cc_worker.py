@@ -6,9 +6,12 @@ Strong scaling over vertex-partition counts {1, 2, 4, 8} on a synthetic
 tet-mesh-style edge list (the Freudenthal tetrahedralization of an edge^3
 grid emitted as a fully unstructured edge list), with the single-device
 `connected_components_graph` as the 1-partition reference and oracle.  The
-derived column carries the cut-table exchange volume (ghost_bytes), the
-comm-phase count (the paper's budget: 1), and the resolution iteration
-counts."""
+requested size is used verbatim (an edge length or an exact "XxYxZ"
+extent); vertex counts that do not divide a partition count run the padded
+imbalanced-partition path (deviation (p) in DESIGN.md).  The derived
+column carries the cut-table exchange volume (ghost_bytes), the comm-phase
+count (the paper's budget: 1), the resolution iteration counts, and the
+owned-set pad fraction."""
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -27,6 +30,8 @@ from repro.core import (GraphDecomp, distributed_connected_components_graph,
 from repro.configs.dpc_graph import SCALING_PARTS
 from repro.data import perlin_noise, grid_edge_list
 
+from _dpc_worker import _parse_size  # shared "edge or XxYxZ" spec parsing
+
 
 def timeit(fn, *args, reps=3):
     out = fn(*args)
@@ -39,9 +44,9 @@ def timeit(fn, *args, reps=3):
 
 
 def main():
-    edge = int(sys.argv[1])      # grid edge length; n = edge^3 vertices
-    dims = (edge, edge, edge)
-    n = edge ** 3
+    edge = sys.argv[1]           # edge length or exact "XxYxZ" — verbatim
+    dims = _parse_size(edge)
+    n = int(np.prod(dims))
     senders, receivers = grid_edge_list(dims, 14)
     field = perlin_noise(dims, frequency=0.1, seed=0)
     mask = jnp.asarray((field > np.quantile(field, 0.9)).ravel())
@@ -53,8 +58,7 @@ def main():
           f"edges={senders.size};rounds={int(ref.n_rounds)}", flush=True)
 
     for nparts in SCALING_PARTS:
-        if n % nparts:
-            continue
+        # no divisibility skip: a non-dividing count pads the owned sets
         dec = GraphDecomp(n, senders, receivers, nparts)
         mesh = make_dpc_mesh(nparts)
         us, (labels, stats) = timeit(
@@ -65,7 +69,8 @@ def main():
               f"ghost_bytes={int(stats.ghost_bytes)};"
               f"comm_phases={int(stats.comm_phases)};"
               f"table_iters={int(stats.table_iters)};"
-              f"stitch_rounds={int(stats.stitch_rounds)}", flush=True)
+              f"stitch_rounds={int(stats.stitch_rounds)};"
+              f"pad_frac={float(stats.pad_fraction):.4f}", flush=True)
 
 
 if __name__ == "__main__":

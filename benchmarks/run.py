@@ -42,7 +42,10 @@ def _emit(name, us, derived=""):
     print(f"{name},{us:.0f},{derived}", flush=True)
 
 
-def tab1_strong_scaling(base: int = 96):
+def tab1_strong_scaling(base="96"):
+    """base: edge length or an exact "XxYxZ" size (e.g. 97x61x43) — passed
+    through verbatim; non-divisible shapes run the pad-and-mask path and the
+    report carries the per-block pad fraction."""
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8")
     worker = os.path.join(os.path.dirname(__file__), "_dpc_worker.py")
@@ -55,7 +58,7 @@ def tab1_strong_scaling(base: int = 96):
         raise RuntimeError("strong-scaling worker failed")
 
 
-def tab2_weak_scaling(base: int = 48):
+def tab2_weak_scaling(base="48"):
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8")
     worker = os.path.join(os.path.dirname(__file__), "_dpc_worker.py")
@@ -68,11 +71,13 @@ def tab2_weak_scaling(base: int = 48):
         raise RuntimeError("weak-scaling worker failed")
 
 
-def tab4_graph_cc_scaling(edge: int = 24):
+def tab4_graph_cc_scaling(edge="24"):
     """Unstructured CC strong scaling (paper §5, the graph path): vertex
     partitions {1, 2, 4, 8} of a synthetic tet-mesh edge list vs the
     single-device oracle; derived columns expose the one-phase cut-table
-    exchange (ghost_bytes / comm_phases)."""
+    exchange (ghost_bytes / comm_phases) and the owned-set pad fraction.
+    edge: grid edge length or an exact "XxYxZ" size; counts that do not
+    divide the partition count run the padded (imbalanced) path."""
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8")
     worker = os.path.join(os.path.dirname(__file__), "_graph_cc_worker.py")
@@ -186,29 +191,46 @@ def lm_train_microbench():
     _emit("lm_train_step_smoke_8x64", us, f"params={cfg.n_params()}")
 
 
-# name -> (fn, default kwargs, --tiny kwargs for the CI smoke step)
+# name -> (fn, default kwargs, --tiny kwargs for the CI smoke step).
+# Tiny scaling sizes are PRIME on purpose: the nightly bench artifact then
+# exercises the ragged pad-and-mask path on every layout.
 _BENCHES = {
     "tab3_threshold": (tab3_threshold, {"edge": 64}, {"edge": 24}),
     "alg_doubling_vs_wave": (alg_doubling_vs_wave, {"edge": 256},
                              {"edge": 64}),
     "kernels": (kernels, {}, {}),
     "lm_train_microbench": (lm_train_microbench, {}, {}),
-    "tab1_strong_scaling": (tab1_strong_scaling, {"base": 64}, {"base": 16}),
+    "tab1_strong_scaling": (tab1_strong_scaling, {"base": 64},
+                            {"base": 17}),
     "tab2_weak_scaling": (tab2_weak_scaling, {"base": 32}, {"base": 8}),
     "tab4_graph_cc_scaling": (tab4_graph_cc_scaling, {"edge": 24},
-                              {"edge": 8}),
+                              {"edge": 7}),
 }
+
+# benches that accept an exact user size via --size= (passed through
+# verbatim — sizes are never rounded to divisible shapes)
+_SIZED = {"tab1_strong_scaling": "base", "tab2_weak_scaling": "base",
+          "tab4_graph_cc_scaling": "edge"}
 
 
 def main(argv=None) -> None:
-    """Usage: run.py [--tiny] [bench ...] — no names runs everything.
-    Output is CSV on stdout (CI redirects it into an artifact)."""
+    """Usage: run.py [--tiny] [--size=XxYxZ] [bench ...] — no names runs
+    everything.  --size passes the user's exact size through to the scaling
+    benches (any extent: non-divisible shapes take the padded path and the
+    report prints the pad fraction per block).  Output is CSV on stdout (CI
+    redirects it into an artifact)."""
     argv = sys.argv[1:] if argv is None else argv
     tiny = "--tiny" in argv
+    size = None
+    for a in argv:
+        if a.startswith("--size="):
+            size = a.split("=", 1)[1]
     names = [a for a in argv if not a.startswith("-")]
-    bad_flags = [a for a in argv if a.startswith("-") and a != "--tiny"]
+    bad_flags = [a for a in argv if a.startswith("-") and a != "--tiny"
+                 and not a.startswith("--size=")]
     if bad_flags:
-        sys.exit(f"unknown flag(s) {bad_flags}; the only flag is --tiny")
+        sys.exit(f"unknown flag(s) {bad_flags}; "
+                 "flags are --tiny and --size=XxYxZ")
     unknown = [n for n in names if n not in _BENCHES]
     if unknown:
         sys.exit(f"unknown benchmark(s) {unknown}; "
@@ -216,7 +238,10 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     for n in names or list(_BENCHES):
         fn, full_kw, tiny_kw = _BENCHES[n]
-        fn(**(tiny_kw if tiny else full_kw))
+        kw = dict(tiny_kw if tiny else full_kw)
+        if size is not None and n in _SIZED:
+            kw[_SIZED[n]] = size
+        fn(**kw)
 
 
 if __name__ == "__main__":

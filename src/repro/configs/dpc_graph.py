@@ -12,8 +12,10 @@ Two mesh families:
     case: every partition may touch every other).
 
 The vertex partition is 1-D (contiguous global-id blocks over the
-flattened device mesh); vertex counts are multiples of 512 so the same
-cell lowers on both production meshes.
+flattened device mesh).  Vertex counts need not divide the device count:
+imbalanced partitions pad their owned sets with inert sentinels
+(deviation (p) in DESIGN.md), so prime-sized meshes lower on both
+production meshes too.
 """
 import dataclasses
 
@@ -36,14 +38,18 @@ SHAPES = {
     "geometry_32": {"kind": "graph_cc", "dims": (32, 32, 32),
                     "geometry": True},
     "random_1m": {"kind": "graph_cc_random", "n": 1 << 20, "avg_degree": 8},
+    # prime vertex count: an imbalanced (padded) partition on every mesh
+    "tet_ragged": {"kind": "graph_cc", "dims": (61, 43, 29)},
 }
 
-# smoke vertex counts stay divisible by the 256/512-way flat meshes
+# smoke vertex counts need not divide the 256/512-way flat meshes (padded
+# owned sets, deviation (p) in DESIGN.md); tet_ragged keeps a prime count
 SMOKE_SHAPES = {
     "tet_64": {"kind": "graph_cc", "dims": (8, 8, 8)},
     "tet_32": {"kind": "graph_cc", "dims": (8, 8, 8)},
     "geometry_32": {"kind": "graph_cc", "dims": (8, 8, 8), "geometry": True},
     "random_1m": {"kind": "graph_cc_random", "n": 4096, "avg_degree": 8},
+    "tet_ragged": {"kind": "graph_cc", "dims": (7, 7, 7)},
 }
 
 # partition counts exercised by the graph-CC strong-scaling benchmark

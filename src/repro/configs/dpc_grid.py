@@ -33,15 +33,21 @@ SHAPES = {
     "grid_1024": {"kind": "dpc", "dims": (1024, 1024, 1024)},
     "cc_1024": {"kind": "dpc_cc", "dims": (1024, 1024, 1024)},
     "cc_512": {"kind": "dpc_cc", "dims": (512, 512, 512)},
+    # prime extents: the paper's real datasets are not multiples of the
+    # node count — exercised via pad-and-mask (deviation (p) in DESIGN.md)
+    "grid_ragged": {"kind": "dpc", "dims": (971, 613, 431)},
+    "cc_ragged": {"kind": "dpc_cc", "dims": (971, 613, 431)},
 }
 
-# smoke grids keep every decomposed axis divisible by the smoke layouts
-# (and X by the 512-way flat mesh)
+# smoke grids: small enough to lower fast; ragged shapes keep their prime
+# extents (nothing needs to divide the mesh since pad-and-mask landed)
 SMOKE_SHAPES = {
     "grid_512": {"kind": "dpc", "dims": (512, 8, 8)},
     "grid_1024": {"kind": "dpc", "dims": (1024, 8, 8)},
     "cc_1024": {"kind": "dpc_cc", "dims": (1024, 8, 8)},
     "cc_512": {"kind": "dpc_cc", "dims": (512, 8, 8)},
+    "grid_ragged": {"kind": "dpc", "dims": (97, 61, 43)},
+    "cc_ragged": {"kind": "dpc_cc", "dims": (97, 61, 43)},
 }
 
 # shard layouts exercised by the scaling benchmarks (1-D slabs vs 2-D/3-D

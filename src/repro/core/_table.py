@@ -15,6 +15,15 @@ This module holds the backend-independent pieces: the pointer-doubling chase
 (Alg. 2 lines 15-25), the equal-label group machinery and hook+propagate
 fixpoint of deviation (d2) in DESIGN.md, and the value-search substitution
 (Alg. 2 lines 27-33 generalised to merged labels).
+
+Sentinel contract (deviation (p) in DESIGN.md): ragged decompositions pad
+their gathered tables with slots whose label is -1 and whose mask is False.
+Everything here is sentinel-aware by construction — `pointer_chase` fixes
+entries < 0 (the backend `lookup` closures gate on `t >= 0`), the cut hooks
+fed to `hook_propagate` gate on the gathered mask (False at padding, so a
+pad slot can never hook or be hooked), and `value_substitute` leaves
+negative labels untouched — so pad slots can never leak a label into a real
+component, nor acquire one.
 """
 from __future__ import annotations
 

@@ -7,6 +7,14 @@ the paper's "one layer of ghost vertices".  Ghost corners/edges are filled
 by exchanging axis-by-axis on the progressively extended block, the standard
 dimension-ordered halo exchange.
 
+Grid extents need NOT divide the layout: blocks take the ceil-division
+extent, the grid is padded up to ``layout * local`` per decomposed axis, and
+padding is masked with sentinels that can never win an argmax or hook a
+table row — order -1 (below every real order value) for manifolds, mask
+False for CC, label -1 in the gathered boundary table (deviation (p) in
+DESIGN.md).  `DPCStats.ghost_bytes`/`masked_ghost_fraction` count only
+in-domain table slots; `pad_fraction` reports the padding overhead.
+
 The local phase runs entirely in *local* extended-block ids.  Because every
 vertex of the extended block has global coordinates ``origin + local``, the
 local raveled order is exactly the global id order restricted to the block,
@@ -67,8 +75,18 @@ class DPCStats(NamedTuple):
     local_iters: jax.Array      # pointer-doubling rounds in the local phase
     table_iters: jax.Array      # rounds on the gathered ghost table
     stitch_rounds: jax.Array    # CC only (0 for MS)
-    ghost_bytes: jax.Array      # bytes all-gathered (the ONE comm phase)
-    masked_ghost_fraction: jax.Array  # CC: fraction of boundary actually masked
+    ghost_bytes: jax.Array      # in-domain bytes all-gathered (the ONE comm
+                                # phase; pad slots excluded, deviation (p))
+    masked_ghost_fraction: jax.Array  # CC: fraction of boundary actually
+                                      # masked (over in-domain slots)
+    pad_fraction: jax.Array     # fraction of block cells that are padding
+                                # (0 whenever the layout divides the grid)
+    comm_phases: jax.Array      # bulk exchange phases traced (paper budget:
+                                # 1; the halo ppermute is ghost setup, not a
+                                # gather phase)
+
+
+_N_STATS = len(DPCStats._fields)
 
 
 def make_dpc_mesh(layout, devices=None) -> Mesh:
@@ -92,8 +110,12 @@ def make_dpc_mesh(layout, devices=None) -> Mesh:
 class BlockDecomp:
     """Static geometry of an N-D block decomposition of a structured grid.
 
-    Grid axis ``a`` (a < k) is split into ``layout[a]`` equal blocks mapped
-    to mesh axis ``names[a]``; remaining grid axes stay whole.  Provides the
+    Grid axis ``a`` (a < k) is split into ``layout[a]`` ceil-division blocks
+    mapped to mesh axis ``names[a]``; remaining grid axes stay whole.  When
+    the extent does not divide, every block still gets the same static
+    extent ``local[a] = ceil(grid[a] / layout[a])`` and the trailing cells
+    (possibly whole trailing blocks) are padding, masked with sentinels that
+    are inert in every phase — deviation (p) in DESIGN.md.  Provides the
     global<->local id arithmetic and the layout of the gathered boundary
     table: the table is the concatenation, over decomposed axes ``a``, of
     (nblocks, 2, face_size[a]) segments holding every block's lo/hi owned
@@ -110,13 +132,15 @@ class BlockDecomp:
         if self.k > self.ndim:
             raise ValueError(f"mesh has {self.k} axes but grid is "
                              f"{self.ndim}-D")
-        for a in range(self.k):
-            if self.grid[a] % self.layout[a]:
-                raise ValueError(f"grid axis {a} ({self.grid[a]}) not "
-                                 f"divisible by {self.layout[a]} blocks")
         self.local = tuple(
-            self.grid[i] // self.layout[i] if i < self.k else self.grid[i]
+            -(-self.grid[i] // self.layout[i]) if i < self.k
+            else self.grid[i]
             for i in range(self.ndim))
+        # the statically padded grid the SPMD program actually runs on
+        self.padded = tuple(
+            self.local[i] * self.layout[i] if i < self.k else self.grid[i]
+            for i in range(self.ndim))
+        self.ragged = self.padded != self.grid
         self.ext = tuple(
             self.local[i] + 2 if i < self.k else self.local[i]
             for i in range(self.ndim))
@@ -153,6 +177,19 @@ class BlockDecomp:
         self.owned_slices = tuple(
             slice(1, self.local[i] + 1) if i < self.k else slice(None)
             for i in range(self.ndim))
+        # closed-form count of in-domain table slots (pad slots excluded):
+        # along axis a there are f_a valid lo/hi face positions, each
+        # carrying prod(grid[i != a]) in-domain cells (the per-axis valid
+        # cell counts sum back to the exact grid extent) — this is what
+        # DPCStats.ghost_bytes reports (deviation (p) in DESIGN.md)
+        self.n_valid_slots = 0
+        for a in range(self.k):
+            L = self.local[a]
+            f = sum(int(b * L < self.grid[a]) + int(b * L + L - 1
+                                                    < self.grid[a])
+                    for b in range(self.layout[a]))
+            self.n_valid_slots += f * (self.size // self.grid[a])
+        self.pad_fraction = 1.0 - self.size / math.prod(self.padded)
 
     def ghost_mask(self) -> np.ndarray:
         """Boolean ext-block array marking the ghost layers."""
@@ -170,7 +207,9 @@ class BlockDecomp:
         boundary table.  Returns (is_boundary, flat_slot); a vertex on
         several faces (block edge/corner) is canonicalised to the lowest
         decomposed axis.  Works under numpy (static precompute) and jnp
-        (traced lookups)."""
+        (traced lookups).  Only defined for in-domain ids — pad cells of a
+        ragged decomposition never reach a lookup because their table
+        entries carry the fixed sentinel -1 (deviation (p) in DESIGN.md)."""
         xs = [(g // self.stride[i]) % self.grid[i] for i in range(self.ndim)]
         B = 0
         for a in range(self.k):
@@ -224,6 +263,37 @@ def _decomp_for(mesh: Mesh, grid_shape) -> BlockDecomp:
 
 
 # --- shared traced helpers ---------------------------------------------------
+
+
+def _pad_input(x, dec: BlockDecomp, fill):
+    """Pad a global input up to the statically padded grid (deviation (p)):
+    `fill` must be the phase's inert sentinel (order -1 / mask False), so
+    padding can never win a steepest/mask argmax."""
+    if not dec.ragged:
+        return x
+    pads = [(0, dec.padded[i] - dec.grid[i]) for i in range(dec.ndim)]
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+def _unpad_output(x, dec: BlockDecomp):
+    """Slice a padded global output back to the real grid extent."""
+    if not dec.ragged:
+        return x
+    return x[tuple(slice(0, g) for g in dec.grid)]
+
+
+def _owned_valid(dec: BlockDecomp):
+    """Boolean owned-block array marking in-domain (non-pad) cells, from the
+    block's position on the mesh (deviation (p) in DESIGN.md)."""
+    total = None
+    for a in range(dec.k):
+        b = lax.axis_index(dec.names[a])
+        x = b * dec.local[a] + jnp.arange(dec.local[a], dtype=jnp.int32)
+        shape = [1] * dec.ndim
+        shape[a] = -1
+        v = (x < dec.grid[a]).reshape(shape)
+        total = v if total is None else total & v
+    return jnp.broadcast_to(total, dec.local)
 
 
 def _halo_extend(ext, dim, name, n_blocks, fill):
@@ -281,9 +351,10 @@ def _gather_table(owned, dec: BlockDecomp):
 
 def _table_compress(T, dec: BlockDecomp, max_iter=64):
     """Pointer doubling on the gathered flat table (Alg. 2 lines 15-25).
-    Entries < 0 (unmasked, CC only) and non-boundary targets are fixed.
-    The slot lookup is pure coordinate arithmetic (boundary_pos); the chase
-    itself is the shared backend-agnostic loop in core/_table.py."""
+    Entries < 0 (unmasked CC cells and the pad sentinels of deviation (p))
+    and non-boundary targets are fixed.  The slot lookup is pure coordinate
+    arithmetic (boundary_pos); the chase itself is the shared
+    backend-agnostic loop in core/_table.py."""
     def lookup(t):
         is_b, pos = dec.boundary_pos(jnp.clip(t, 0), jnp)
         tv = t[jnp.clip(pos, 0, t.size - 1)]
@@ -313,8 +384,12 @@ def _manifold_block(order_blk, *, dec: BlockDecomp, connectivity):
     # 3. local compression (Alg. 1 lines 9-19)
     d, local_iters = path_compress(d)
 
-    # 4. to global ids + the single communication phase (Alg. 2)
+    # 4. to global ids + the single communication phase (Alg. 2); pad cells
+    #    of a ragged block carry the sentinel -1, which the chase fixes and
+    #    the substitution skips (deviation (p) in DESIGN.md)
     owned = _gid_map(dec).ravel()[d].reshape(dec.ext)[dec.owned_slices]
+    if dec.ragged:
+        owned = jnp.where(_owned_valid(dec), owned, dec.id_dtype(-1))
     T = _gather_table(owned, dec)
 
     # 5. ghost-table compression (identical on every device)
@@ -322,15 +397,18 @@ def _manifold_block(order_blk, *, dec: BlockDecomp, connectivity):
 
     # 6. final substitution (Alg. 2 lines 27-33)
     o = owned.ravel()
-    is_b, pos = dec.boundary_pos(o, jnp)
-    final = jnp.where(is_b, T[jnp.clip(pos, 0, T.size - 1)], o)
+    is_b, pos = dec.boundary_pos(jnp.clip(o, 0), jnp)
+    final = jnp.where((o >= 0) & is_b,
+                      T[jnp.clip(pos, 0, T.size - 1)], o)
 
     stats = DPCStats(
         local_iters=lax.pmax(local_iters, dec.names),
         table_iters=table_iters,  # identical on all devices (same table)
         stitch_rounds=jnp.int32(0),
-        ghost_bytes=jnp.float32(T.size * T.dtype.itemsize),
+        ghost_bytes=jnp.float32(dec.n_valid_slots * T.dtype.itemsize),
         masked_ghost_fraction=jnp.float32(1.0),
+        pad_fraction=jnp.float32(dec.pad_fraction),
+        comm_phases=jnp.int32(1),
     )
     return final.reshape(order_blk.shape), stats
 
@@ -339,18 +417,21 @@ def distributed_manifold(order, mesh: Mesh, connectivity: int = 6,
                          descending: bool = True):
     """Descending (or ascending) manifold of a block-sharded order field.
 
-    order: int array whose leading axes are divisible by the mesh shape
-    (mesh axis a decomposes grid axis a).  Returns the label grid (sharded
-    the same way) and replicated DPCStats.
+    order: int array of ANY extent (mesh axis a decomposes grid axis a;
+    non-divisible extents are padded with inert sentinels, deviation (p) in
+    DESIGN.md).  Returns the label grid (same extent as `order`) and
+    replicated DPCStats.
     """
     dec = _decomp_for(mesh, order.shape)
     if not descending:
         order = order.size - 1 - order  # ascending = descending on flipped order
+    order = _pad_input(order, dec, -1)  # -1: below every real order value
     fn = partial(_manifold_block, dec=dec, connectivity=connectivity)
     spec = P(*dec.names, *([None] * (order.ndim - dec.k)))
     mapped = shard_map_norep(fn, mesh, (spec,),
-                             (spec, DPCStats(*([P()] * 5))))
-    return mapped(order)
+                             (spec, DPCStats(*([P()] * _N_STATS))))
+    labels, stats = mapped(order)
+    return _unpad_output(labels, dec), stats
 
 
 # --- connected components ----------------------------------------------------
@@ -472,13 +553,18 @@ def _cc_block(mask_blk, *, dec: BlockDecomp, connectivity,
                        Tstar[jnp.clip(pos, 0, Tstar.size - 1)], o)
     final = value_substitute(o, chased, sorted_vals, G[perm])
 
+    # pad table slots are label -1 / mask False by construction (the input
+    # mask is padded False, deviation (p)), so they are excluded here
     stats = DPCStats(
         local_iters=lax.pmax(local_iters, dec.names),
         table_iters=table_iters + prop_iters,
         stitch_rounds=lax.pmax(stitch_rounds, dec.names),
-        ghost_bytes=jnp.float32(T.size * T.dtype.itemsize)
-        + (jnp.float32(M.size) if gather_mask else 0.0),
-        masked_ghost_fraction=jnp.mean(M.astype(jnp.float32)),
+        ghost_bytes=jnp.float32(dec.n_valid_slots * T.dtype.itemsize)
+        + (jnp.float32(dec.n_valid_slots) if gather_mask else 0.0),
+        masked_ghost_fraction=jnp.sum(M).astype(jnp.float32)
+        / jnp.float32(max(dec.n_valid_slots, 1)),
+        pad_fraction=jnp.float32(dec.pad_fraction),
+        comm_phases=jnp.int32(1),
     )
     return final.reshape(mask_blk.shape), stats
 
@@ -486,13 +572,17 @@ def _cc_block(mask_blk, *, dec: BlockDecomp, connectivity,
 def distributed_connected_components(mask, mesh: Mesh, connectivity: int = 6,
                                      gather_mask: bool = True):
     """Mask-implicit connected components of a block-sharded grid (Alg. 3 +
-    Alg. 2).  Returns (labels, DPCStats); labels carry the largest vertex id
-    of the component, -1 where unmasked.  gather_mask=False drops the
+    Alg. 2).  Any grid extent works: non-divisible extents are padded with
+    mask=False sentinels, which are inert in every phase (deviation (p) in
+    DESIGN.md).  Returns (labels, DPCStats); labels carry the largest vertex
+    id of the component, -1 where unmasked.  gather_mask=False drops the
     redundant mask exchange (§Perf)."""
     dec = _decomp_for(mesh, mask.shape)
+    mask = _pad_input(mask, dec, False)  # padding is never masked
     fn = partial(_cc_block, dec=dec, connectivity=connectivity,
                  gather_mask=gather_mask)
     spec = P(*dec.names, *([None] * (mask.ndim - dec.k)))
     mapped = shard_map_norep(fn, mesh, (spec,),
-                             (spec, DPCStats(*([P()] * 5))))
-    return mapped(mask)
+                             (spec, DPCStats(*([P()] * _N_STATS))))
+    labels, stats = mapped(mask)
+    return _unpad_output(labels, dec), stats

@@ -29,8 +29,11 @@ coordinate arithmetic for *table-driven* id maps:
 Ghost *input* values (the mask at ghost vertices) are materialised by the
 input scatter `mask[local_gid]` rather than exchanged with ppermute — the
 unstructured analog of the structured halo; see deviation (g1) in DESIGN.md.
-Fixed SPMD shapes require a balanced partition and padded ghost/edge/cut
-tables — deviation (g2) in DESIGN.md.
+Fixed SPMD shapes are obtained by padding: the ghost/edge/cut tables pad to
+their maxima (deviation (g2) in DESIGN.md), and each partition's owned set
+pads to `max(counts)` with inert sentinel slots (deviation (p)), so
+*imbalanced* (METIS-style) partitions — and vertex counts that do not
+divide the partition count — are first-class.
 
 `GraphDPCStats.comm_phases` counts the all_gather phases actually traced
 into the program (the paper's budget: exactly one).
@@ -57,13 +60,19 @@ class GraphDPCStats(NamedTuple):
     local_iters: jax.Array      # pointer-doubling rounds in the local phase
     table_iters: jax.Array      # chase + propagate rounds on the cut table
     stitch_rounds: jax.Array    # local stitch fixpoint rounds
-    ghost_bytes: jax.Array      # bytes all-gathered (the ONE comm phase)
-    masked_ghost_fraction: jax.Array  # fraction of cut slots actually masked
+    ghost_bytes: jax.Array      # real cut bytes all-gathered (the ONE comm
+                                # phase; pad slots excluded, deviation (p))
+    masked_ghost_fraction: jax.Array  # fraction of REAL cut slots masked
     comm_phases: jax.Array      # all_gather phases traced (paper budget: 1)
+    pad_fraction: jax.Array     # fraction of owned slots that are padding
+                                # (0 for a balanced partition)
+
+
+_N_STATS = len(GraphDPCStats._fields)
 
 
 class GraphDecomp:
-    """Static geometry of a balanced vertex partition of an edge-list mesh.
+    """Static geometry of a vertex partition of an edge-list mesh.
 
     The mirror of BlockDecomp for unstructured meshes: where BlockDecomp
     derives ghost faces and boundary-table slots from coordinate strides,
@@ -72,12 +81,16 @@ class GraphDecomp:
     edge, the repo-wide graph convention).
 
     Partition: `part[v]` assigns vertex v to one of `nparts` devices;
-    default is contiguous equal blocks of global ids (requires
-    ``n % nparts == 0``).  Any explicit assignment works as long as it is
-    *balanced* (equal counts — fixed SPMD shapes, deviation (g2)).
+    default is contiguous blocks of global ids (the leading blocks one
+    larger when ``n % nparts != 0``).  ANY explicit assignment works —
+    imbalanced counts, empty partitions, a future METIS partitioner: each
+    partition's owned set is padded to ``n_owned = max(counts)`` with inert
+    sentinel slots (deviation (p) in DESIGN.md), the same fixed-SPMD-shape
+    mechanism the ghost/edge/cut tables already use (deviation (g2)).
 
     Per partition p:
-      owned    the sorted global ids with part == p (exactly `n_owned`);
+      owned    the sorted global ids with part == p (padded to `n_owned`;
+               pad entries carry gid `n`, dropped by the output scatter);
       ghosts   the one-ring: vertices of other partitions reached by a cut
                edge from p;
       local id index into sorted(owned ∪ ghosts), padded at the end to
@@ -121,20 +134,25 @@ class GraphDecomp:
                            and 0 <= r.min() and r.max() < self.n):
             raise ValueError("edge endpoints out of range")
         if part is None:
-            if self.n % self.nparts:
-                raise ValueError(f"{self.n} vertices not divisible into "
-                                 f"{self.nparts} contiguous partitions; "
-                                 "pass an explicit `part` assignment")
-            part = np.repeat(np.arange(self.nparts), self.n // self.nparts)
+            # contiguous blocks; when n is not divisible the leading
+            # n % nparts blocks are one vertex larger (no rounding of the
+            # requested size — raggedness is padded away below)
+            sizes = [len(c) for c in
+                     np.array_split(np.arange(self.n), self.nparts)]
+            part = np.repeat(np.arange(self.nparts), sizes)
         part = np.asarray(part, dtype=np.int64).ravel()
         if part.shape[0] != self.n:
             raise ValueError("part must assign every vertex")
+        if part.size and (part.min() < 0 or part.max() >= self.nparts):
+            raise ValueError(f"part values must lie in [0, {self.nparts})")
         counts = np.bincount(part, minlength=self.nparts)
-        if counts.shape[0] != self.nparts or not (counts == counts[0]).all():
-            raise ValueError(f"partition must be balanced; got vertex counts "
-                             f"{counts.tolist()}")
+        # no balance requirement: every partition's owned set pads to the
+        # maximum count with inert sentinel slots (deviation (p) in
+        # DESIGN.md), so arbitrary METIS-style assignments are accepted
         self.part = part
-        self.n_owned = int(counts[0])
+        self.owned_counts = counts
+        self.n_owned = int(counts.max())
+        self.pad_fraction = 1.0 - self.n / (self.nparts * self.n_owned)
 
         ps, pr = part[s], part[r]
         cross = ps != pr
@@ -151,8 +169,12 @@ class GraphDecomp:
                              "use more partitions")
         self.c_max = max((len(c) for c in cut), default=0)
         self.table_size = self.nparts * self.c_max
+        self.n_cut = int(sum(len(c) for c in cut))  # real (non-pad) slots
 
-        self.owned_gid = np.stack(owned)                     # (P, n_owned)
+        # owned set padded to n_owned; pad gids are the out-of-range `n`,
+        # which the output scatter drops (deviation (p) in DESIGN.md)
+        self.owned_gid = np.full((self.nparts, self.n_owned), self.n,
+                                 np.int64)
         lgid = np.full((self.nparts, self.n_local), -1, np.int64)
         valid = np.zeros((self.nparts, self.n_local), bool)
         is_ghost = np.zeros((self.nparts, self.n_local), bool)
@@ -163,12 +185,18 @@ class GraphDecomp:
         eloc = []
         for p in range(self.nparts):
             o, g, c = owned[p], ghosts[p], cut[p]
+            self.owned_gid[p, :len(o)] = o
             loc = np.sort(np.concatenate([o, g]))  # local order == gid order
             lgid[p, :len(loc)] = loc
             valid[p, :len(loc)] = True
             gid2lid[loc] = np.arange(len(loc))
             is_ghost[p, gid2lid[g]] = True
-            owned_lidx[p] = gid2lid[o]
+            owned_lidx[p, :len(o)] = gid2lid[o]
+            if len(o) < self.n_owned:
+                # pad owned slots point at the first invalid local slot
+                # (len(o) < n_owned implies len(loc) < n_local): mask False
+                # there, so the pad label is -1 everywhere downstream
+                owned_lidx[p, len(o):] = min(len(loc), self.n_local - 1)
             cut_lidx[p, :len(c)] = gid2lid[c]
             slot_of[c] = p * self.c_max + np.arange(len(c))
             esel = (ps == p) | (pr == p)
@@ -291,9 +319,11 @@ def _cc_partition(local_mask, lgid, local_ghost, owned_lidx, es, er,
         final = value_substitute(owned, chased, sorted_vals, G[perm])
         table_iters = chase_iters + prop_iters
         rows = 2 if gather_mask else 1
-        ghost_bytes = jnp.float32(dec.table_size * rows
-                                  * jnp.dtype(dt).itemsize)
-        masked_frac = jnp.mean(M.astype(jnp.float32))
+        # pad cut slots (cut_lidx == -1) carry label -1 / mask False and are
+        # excluded from the exchange accounting (deviation (p) in DESIGN.md)
+        ghost_bytes = jnp.float32(dec.n_cut * rows * jnp.dtype(dt).itemsize)
+        masked_frac = (jnp.sum(M).astype(jnp.float32)
+                       / jnp.float32(max(dec.n_cut, 1)))
 
     stats = GraphDPCStats(
         local_iters=lax.pmax(res.n_compress_iter, name),
@@ -302,6 +332,7 @@ def _cc_partition(local_mask, lgid, local_ghost, owned_lidx, es, er,
         ghost_bytes=ghost_bytes,
         masked_ghost_fraction=masked_frac,
         comm_phases=jnp.int32(n_gather),
+        pad_fraction=jnp.float32(dec.pad_fraction),
     )
     return final[None], stats
 
@@ -342,15 +373,16 @@ def distributed_connected_components_graph(mask, decomp: GraphDecomp,
                  gather_mask=gather_mask)
     spec = P(name, None)
     mapped = shard_map_norep(fn, mesh, (spec,) * 7,
-                             (spec, GraphDPCStats(*([P()] * 6))))
+                             (spec, GraphDPCStats(*([P()] * _N_STATS))))
     owned_stack, stats = mapped(
         local_mask, lgid, jnp.asarray(decomp.local_ghost),
         jnp.asarray(decomp.owned_lidx),
         jnp.asarray(decomp.edge_src), jnp.asarray(decomp.edge_dst),
         jnp.asarray(decomp.cut_lidx))
 
-    # unpermute the (nparts, n_owned) owned labels back to global id order
+    # unpermute the (nparts, n_owned) owned labels back to global id order;
+    # pad slots carry gid n and fall off the scatter (deviation (p))
     labels = jnp.zeros(decomp.n, dtype=dt).at[
         jnp.asarray(decomp.owned_gid.reshape(-1))].set(
-        owned_stack.reshape(-1))
+        owned_stack.reshape(-1), mode="drop")
     return labels, stats

@@ -9,6 +9,11 @@ K full HBM round-trips for global `d <- d[d]` gathers (each of which moves
 fixed points, exactly like ghost vertices in Alg. 1 — the block boundary IS
 a ghost boundary, so correctness follows from the same argument as the
 distributed algorithm, and the remaining global rounds finish the job.
+
+Arrays whose length does not divide the tile size take a ceil-division
+grid: the input is padded up to it with the sentinel -1, which the kernel
+treats as a fixed point, so the clamped last tile never reads past the
+ragged extent (pad-and-mask, deviation (p) in DESIGN.md).
 """
 from __future__ import annotations
 
@@ -37,17 +42,22 @@ def block_pathcompress(d: jax.Array, rounds: int = 4, block: int = 4096,
                        interpret: bool = True) -> jax.Array:
     """K pointer-doubling rounds confined to `block`-sized tiles.
 
-    d: (N,) int32 global pointers (N divisible by block, or block clamped).
+    d: (N,) int32 global pointers (any N; a ragged last tile is padded with
+    the -1 sentinel and sliced back off).
     """
     n = d.shape[0]
-    if n % block:
-        block = n
+    block = min(block, n)
+    n_tiles = -(-n // block)          # ceil: the last tile may be ragged
+    n_pad = n_tiles * block
+    if n_pad != n:
+        d = jnp.pad(d, (0, n_pad - n), constant_values=-1)
     kernel = functools.partial(_kernel, rounds=rounds, block=block)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(n // block,),
+        grid=(n_tiles,),
         in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), d.dtype),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), d.dtype),
         interpret=interpret,
     )(d)
+    return out[:n] if n_pad != n else out

@@ -314,20 +314,29 @@ def build_dpc_cell(arch_id, mod, shape_name, shape, mesh, smoke) -> Cell:
     from repro.launch.mesh import make_block_mesh
     cfg = mod.smoke_config() if smoke else mod.full_config()
     dims = shape["dims"]
-    # block decomposition from the config when it matches the device count
-    # (and divides the grid); otherwise the flat 1-D slab mesh
+    # block decomposition from the config when it matches the device count;
+    # otherwise the flat 1-D slab mesh.  The grid does NOT need to divide
+    # the layout: ragged extents are padded and masked inside the core
+    # (deviation (p) in DESIGN.md)
     layout = tuple(getattr(cfg, "layout", ()) or ())
     n_dev = mesh.devices.size
-    if (layout and math.prod(layout) == n_dev and len(layout) <= len(dims)
-            and all(d % p == 0 for d, p in zip(dims, layout))):
+    if layout and math.prod(layout) == n_dev and len(layout) <= len(dims):
         dpc_mesh = make_block_mesh(layout, mesh)
         note = f"lowered on the {'x'.join(map(str, layout))} block mesh"
+        if any(d % p for d, p in zip(dims, layout)):
+            note += " (ragged extents, pad-and-mask)"
     else:
         dpc_mesh = make_flat_mesh(mesh)
         note = "lowered on the flattened 1-D mesh"
+        if dims[0] % n_dev:
+            note += " (ragged extents, pad-and-mask)"
     names = tuple(dpc_mesh.axis_names)
+    # jit inputs must divide the mesh axes they shard over; a ragged axis
+    # arrives replicated and the core pads + reshards it under shard_map
+    axes = [nm if dims[i] % dpc_mesh.shape[nm] == 0 else None
+            for i, nm in enumerate(names)]
     sh = NamedSharding(dpc_mesh,
-                       P(*names, *([None] * (len(dims) - len(names)))))
+                       P(*axes, *([None] * (len(dims) - len(names)))))
 
     if shape["kind"] == "dpc":
         inp = S(dims, jnp.int32)
@@ -384,7 +393,8 @@ def build_dpc_graph_cell(arch_id, mod, shape_name, shape, mesh, smoke) -> Cell:
     return Cell(arch_id, shape_name, "dpc_graph", cfg, shape, step,
                 (inp,), (sh,),
                 note=f"{ndev}-way vertex partition, "
-                     f"{dec.table_size}-slot cut table")
+                     f"{dec.table_size}-slot cut table, "
+                     f"owned-pad {dec.pad_fraction:.3f}")
 
 
 # --- registry -----------------------------------------------------------------

@@ -1,4 +1,11 @@
-"""Pure-numpy oracles for the DPC core (brute-force reference semantics)."""
+"""Pure-numpy oracles for the DPC core (brute-force reference semantics),
+plus the shared ragged-case generators used by the property-based harness
+(`test_ragged_decomp.py`): random grid shapes including prime extents,
+random layouts up to 8 devices, random feature masks, and random imbalanced
+`part=` assignments.  Every case is a deterministic function of a single
+integer seed, so the same generators serve as hypothesis strategies (seed
+drawn by hypothesis, when installed) and as the fixed seed corpus that
+keeps the fast CI job fast (`GRID_SEED_CORPUS` / `GRAPH_SEED_CORPUS`)."""
 from __future__ import annotations
 
 import numpy as np
@@ -85,6 +92,68 @@ def oracle_components(mask, connectivity=6):
         for u in comp:
             labels[u] = m
     return labels.reshape(shape)
+
+
+# --- ragged pad-and-mask case generators (deviation (p) in DESIGN.md) -------
+
+# deterministic corpus for the fast CI job (hypothesis, when installed,
+# draws extra seeds through the same generators); sized so the subprocess
+# compile time stays within the fast-suite budget
+GRID_SEED_CORPUS = tuple(range(8))
+GRAPH_SEED_CORPUS = tuple(range(8))
+
+
+def ragged_grid_case(seed):
+    """(shape, layout, connectivity, mask_p): a random 2-D/3-D grid with
+    arbitrary (often prime, often non-divisible) extents and a random block
+    layout of at most 8 devices; deterministic in `seed`."""
+    rng = np.random.default_rng(0xD9C0 + seed)
+    ndim = int(rng.integers(2, 4))
+    shape = tuple(int(rng.choice([3, 4, 5, 6, 7, 9, 11, 13]))
+                  for _ in range(ndim))
+    k = int(rng.integers(1, ndim + 1))
+    layout, budget = [], 8
+    for _ in range(k):
+        p = int(rng.choice([q for q in (1, 2, 3, 4, 5, 7, 8)
+                            if q <= budget]))
+        layout.append(p)
+        budget //= p
+    layout = tuple(layout)
+    conn = int(rng.choice([4, 6] if ndim == 2 else [6, 14]))
+    mask_p = float(rng.uniform(0.25, 0.95))
+    return shape, layout, conn, mask_p
+
+
+def ragged_graph_case(seed):
+    """(n, senders, receivers, nparts, part, mask): a random sparse
+    multigraph (both edge directions present) under a random *imbalanced*
+    partition assignment — the METIS stand-in; partitions may be empty or
+    own a single vertex; deterministic in `seed`."""
+    rng = np.random.default_rng(0x96AF0 + seed)
+    n = int(rng.integers(2, 120))
+    m = int(rng.integers(1, 4 * n))
+    a = rng.integers(0, n, m)
+    b = rng.integers(0, n, m)
+    senders = np.concatenate([a, b])
+    receivers = np.concatenate([b, a])
+    nparts = int(rng.choice([2, 3, 4, 8]))
+    part = rng.integers(0, nparts, n)
+    mask = rng.random(n) < float(rng.uniform(0.3, 0.95))
+    return n, senders, receivers, nparts, part, mask
+
+
+try:  # hypothesis strategies over the same generators (optional dep)
+    from hypothesis import strategies as _st
+
+    HAVE_HYPOTHESIS = True
+
+    def grid_case_strategy():
+        return _st.integers(0, 2**31 - 1).map(ragged_grid_case)
+
+    def graph_case_strategy():
+        return _st.integers(0, 2**31 - 1).map(ragged_graph_case)
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 def oracle_components_graph(mask, senders, receivers):

@@ -158,7 +158,9 @@ def test_all_archs_registered():
         assert hasattr(mod, "FAMILY")
         assert mod.full_config() is not None
         assert mod.smoke_config() is not None
-        assert len(mod.SHAPES) == 4
+        # the §4 matrix: at least the four comparable shapes everywhere;
+        # the DPC families add ragged prime-extent shapes on top
+        assert len(mod.SHAPES) >= 4
         assert set(mod.SMOKE_SHAPES) == set(mod.SHAPES)
 
 

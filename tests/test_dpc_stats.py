@@ -1,7 +1,10 @@
 """DPCStats invariants under the block decomposition (fast CI job).
 
 * ghost_bytes equals the closed-form total boundary *surface* of the block
-  lattice — it scales with surface, not volume, when the grid grows;
+  lattice — it scales with surface, not volume, when the grid grows; under
+  ragged (non-divisible) extents only in-domain face cells count — padded
+  cells must not (deviation (p) in DESIGN.md);
+* comm_phases == 1: padding must not add exchange phases;
 * table_iters is bit-identical on every device (all devices compress the
   same gathered table — the replicated-table invariant the substitution
   step relies on).
@@ -29,27 +32,45 @@ _WORKER = textwrap.dedent("""
     assert len(jax.devices()) == 8
 
     def surface_bytes(grid, layout, itemsize=4):
+        # independent reimplementation: only in-domain face cells count —
+        # along axis a a block's lo/hi face position is in-domain iff its
+        # coordinate is < grid[a]; each in-domain face position carries
+        # prod(grid[i != a]) in-domain cells (deviation (p) in DESIGN.md).
+        # For divisible grids this reduces to the old nb*2*face_size form.
         k = len(layout)
-        local = [g // p for g, p in zip(grid, layout)] + list(grid[k:])
-        nb = math.prod(layout)
-        return sum(nb * 2 * (math.prod(local) // local[a]) * itemsize
-                   for a in range(k))
+        local = [-(-g // p) for g, p in zip(grid, layout)]
+        total = math.prod(grid)
+        n = 0
+        for a in range(k):
+            f = sum(int(b * local[a] < grid[a])
+                    + int(b * local[a] + local[a] - 1 < grid[a])
+                    for b in range(layout[a]))
+            n += f * (total // grid[a])
+        return n * itemsize
 
     rng = np.random.default_rng(0)
 
-    # --- ghost_bytes == closed-form boundary surface ----------------------
+    # --- ghost_bytes == closed-form boundary surface (divisible + ragged;
+    #     ragged cases include an entirely-padded trailing block) ----------
     for grid, layout in [((8, 8, 8), (8,)), ((8, 8, 8), (2, 4)),
-                         ((8, 8, 8), (2, 2, 2)), ((8, 12, 6), (4, 2))]:
+                         ((8, 8, 8), (2, 2, 2)), ((8, 12, 6), (4, 2)),
+                         ((17, 13, 11), (2, 2, 2)), ((7, 9), (2, 2)),
+                         ((5, 7), (4,)), ((13, 11, 7), (2, 4))]:
         order = compute_order(jnp.asarray(rng.standard_normal(grid)))
         _, st = distributed_manifold(order, make_dpc_mesh(layout), 6)
         assert int(st.ghost_bytes) == surface_bytes(grid, layout), \\
             (grid, layout, int(st.ghost_bytes))
+        assert int(st.comm_phases) == 1, (grid, layout)
+        ragged = any(g % p for g, p in zip(grid, layout))
+        assert (float(st.pad_fraction) > 0) == ragged, (grid, layout)
         mask = jnp.asarray(rng.random(grid) < 0.5)
         _, st = distributed_connected_components(
             mask, make_dpc_mesh(layout), 6, gather_mask=True)
-        # labels (4B) + gathered mask (1B) per boundary slot
+        # labels (4B) + gathered mask (1B) per in-domain boundary slot
         assert int(st.ghost_bytes) == surface_bytes(grid, layout, 5), \\
             (grid, layout, int(st.ghost_bytes))
+        assert int(st.comm_phases) == 1, (grid, layout)
+        assert 0.0 <= float(st.masked_ghost_fraction) <= 1.0, (grid, layout)
 
     # --- surface (not volume) scaling under grid growth -------------------
     gb = {}

@@ -1,5 +1,5 @@
 """Dry-run regression: representative cells must lower + compile on the
-production meshes (512 fake host devices, subprocess).  The full 44-cell
+production meshes (512 fake host devices, subprocess).  The full cell
 matrix runs via `python -m repro.launch.dryrun`; this keeps CI fast."""
 import os
 import subprocess
@@ -15,6 +15,8 @@ _CELLS = [
     ("gat_cora", "ogb_products", "--single-pod"),
     ("bst", "retrieval_cand", "--multi-pod"),
     ("dpc_grid", "cc_512", "--single-pod"),
+    # prime extents over the 8x8x4 block mesh: the pad-and-mask path
+    ("dpc_grid", "cc_ragged", "--single-pod"),
 ]
 
 

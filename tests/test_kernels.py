@@ -51,7 +51,10 @@ def test_steepest_kernel_blocking_invariance(block_x):
 
 
 @pytest.mark.parametrize("n,block", [(64, 16), (256, 64), (1024, 1024),
-                                     (128, 32)])
+                                     (128, 32),
+                                     # ragged last tile (pad-and-mask,
+                                     # deviation (p) in DESIGN.md)
+                                     (100, 32), (97, 64), (130, 128)])
 @pytest.mark.parametrize("rounds", [1, 3, 6])
 def test_block_pathcompress_vs_ref(n, block, rounds):
     rng = np.random.default_rng(n + rounds)
