@@ -21,8 +21,9 @@ import jax.numpy as jnp
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (compute_order, make_dpc_mesh, distributed_manifold,
-                        distributed_connected_components)
+from repro.core import compute_order, make_dpc_mesh
+from repro.core.distributed import (distributed_manifold,
+                                    distributed_connected_components)
 from repro.configs.dpc_grid import SCALING_LAYOUTS
 from repro.data import perlin_noise
 

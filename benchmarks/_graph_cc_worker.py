@@ -25,8 +25,10 @@ import jax.numpy as jnp
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (GraphDecomp, distributed_connected_components_graph,
-                        connected_components_graph, make_dpc_mesh)
+from repro.core import make_dpc_mesh
+from repro.core.connected_components import connected_components_graph
+from repro.core.distributed_graph import (
+    GraphDecomp, distributed_connected_components_graph)
 from repro.configs.dpc_graph import SCALING_PARTS
 from repro.data import perlin_noise, grid_edge_list
 

@@ -94,7 +94,8 @@ def tab3_threshold(edge: int = 96):
     """Implicit DPC-CC vs label-propagation baseline across mask fractions;
     derived column carries the paper's memory argument: implicit needs ONE
     id array, explicit extraction materialises the masked edge list."""
-    from repro.core import connected_components_grid, label_propagation_grid
+    from repro.core.connected_components import connected_components_grid
+    from repro.core.baseline_cc import label_propagation_grid
     from repro.data import perlin_noise
     field = perlin_noise((edge, edge, edge), frequency=0.1, seed=3)
     n = field.size
@@ -117,7 +118,8 @@ def tab3_threshold(edge: int = 96):
 def alg_doubling_vs_wave(edge: int = 512):
     """2D snake: component diameter ~ n; pointer doubling needs O(log n)
     rounds, wave propagation O(n) — the core algorithmic claim."""
-    from repro.core import connected_components_grid, label_propagation_grid
+    from repro.core.connected_components import connected_components_grid
+    from repro.core.baseline_cc import label_propagation_grid
     mask = np.zeros((edge, 64), bool)
     mask[:, ::2] = True
     for i in range(0, 64 - 2, 4):                      # serpentine
@@ -168,6 +170,44 @@ def kernels():
     _emit("kernel_segment_bag_ref", us_r, "take+segment_sum jnp")
 
 
+def serve_throughput(n_requests: int = 24, repeat: int = 3):
+    """Batched multi-tenant serving (DESIGN.md §Serve): replay one mixed
+    CC / MS / manifold / threshold-sweep request sequence through the
+    TopologyEngine.  Pass 0 compiles one executable per layout bucket; the
+    remaining passes replay the same layouts and are served from the
+    executable cache, so the warm row is the steady-state requests/sec.
+    Derived columns carry the serving balance sheet: cache hit rate and the
+    pad fraction of the bucketed layouts (the bounded-padding budget).
+    Sizes come from configs/serve_topology.py smoke_config — the bench
+    measures the serving layer (bucketing, batching, cache), not kernel
+    FLOPs, so small prime extents are the interesting regime."""
+    from repro import configs
+    from repro.serve import TopologyEngine
+    from repro.serve.workload import synthetic_requests
+
+    cfg = configs.get("serve_topology").smoke_config()
+    eng = TopologyEngine(min_extent=cfg.min_extent, max_batch=cfg.max_batch)
+    reqs = synthetic_requests(n_requests, cfg.shapes, mix=cfg.mix,
+                              connectivity=cfg.connectivity,
+                              sweep_k=cfg.sweep_k, seed=0)
+    t0 = time.perf_counter()
+    eng.submit_batch(reqs)
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(max(repeat - 1, 1)):
+        eng.submit_batch(reqs)
+    warm = (time.perf_counter() - t0) / max(repeat - 1, 1)
+    s = eng.stats
+    _emit(f"serve_throughput_cold_{n_requests}", cold / n_requests * 1e6,
+          f"rps={n_requests / cold:.1f};hit_rate=0.00;"
+          f"pad_fraction={s.pad_fraction:.2f}")
+    _emit(f"serve_throughput_warm_{n_requests}", warm / n_requests * 1e6,
+          f"rps={n_requests / warm:.1f};hit_rate={s.hit_rate:.2f};"
+          f"pad_fraction={s.pad_fraction:.2f};executables={len(eng._exec)}")
+    assert s.hit_rate >= 0.5, (
+        f"repeated-layout hit rate {s.hit_rate:.2f} < 0.5")
+
+
 def lm_train_microbench():
     from repro import configs
     from repro.models import lm
@@ -200,6 +240,8 @@ _BENCHES = {
                              {"edge": 64}),
     "kernels": (kernels, {}, {}),
     "lm_train_microbench": (lm_train_microbench, {}, {}),
+    "serve_throughput": (serve_throughput, {"n_requests": 24, "repeat": 3},
+                         {"n_requests": 8, "repeat": 2}),
     "tab1_strong_scaling": (tab1_strong_scaling, {"base": 64},
                             {"base": 17}),
     "tab2_weak_scaling": (tab2_weak_scaling, {"base": 32}, {"base": 8}),

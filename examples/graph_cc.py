@@ -18,8 +18,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (GraphDecomp, distributed_connected_components_graph,
-                        connected_components_graph, make_dpc_mesh)
+from repro.core import make_dpc_mesh
+from repro.core.connected_components import connected_components_graph
+from repro.core.distributed_graph import (
+    GraphDecomp, distributed_connected_components_graph)
 from repro.data import perlin_noise, grid_edge_list
 
 

@@ -16,10 +16,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (compute_order, ms_segmentation,
-                        connected_components_grid, compact_labels,
-                        make_dpc_mesh, distributed_manifold,
-                        distributed_connected_components)
+from repro.core import compute_order, compact_labels, make_dpc_mesh
+from repro.core.connected_components import connected_components_grid
+from repro.core.ms_segmentation import ms_segmentation
+from repro.core.distributed import (distributed_manifold,
+                                    distributed_connected_components)
 from repro.data import perlin_noise
 
 

@@ -20,7 +20,9 @@ _ALIAS = {i.replace("_", "-"): i for i in ARCH_IDS}
 _ALIAS.update({"llama3.2-1b": "llama3_2_1b", "kimi-k2-1t-a32b": "kimi_k2_1t",
                "stablelm-12b": "stablelm_12b", "minitron-8b": "minitron_8b",
                "deepseek-moe-16b": "deepseek_moe_16b",
-               "gat-cora": "gat_cora"})
+               "gat-cora": "gat_cora",
+               # serving-layer config (not an arch; lives outside ARCH_IDS)
+               "serve-topology": "serve_topology"})
 
 
 def get(arch_id: str):

@@ -1,0 +1,36 @@
+"""serve-topology — configuration of the batched multi-tenant topology
+query engine (`repro.serve.TopologyEngine`, DESIGN.md §Serve).
+
+Not an ARCH_IDS member: this config parameterises the serving layer that
+fronts the dpc_grid / dpc_graph workloads, not a model architecture.  The
+`shapes` rotate prime and non-divisible extents on purpose so the workload
+exercises the layout-bucketing path the way real datasets do.
+"""
+import dataclasses
+
+FAMILY = "serve"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeTopologyConfig:
+    name: str = "serve-topology"
+    connectivity: int = 6
+    # engine knobs
+    min_extent: int = 8        # bucket floor: smallest padded grid extent
+    max_batch: int = 64        # largest batch capacity per execution
+    # synthetic workload mix (query, weight) for benchmarks / demos
+    mix: tuple = (("cc", 0.5), ("ms", 0.2), ("manifold", 0.1),
+                  ("threshold_sweep", 0.2))
+    # request extents: prime / non-divisible on purpose (bucketing path)
+    shapes: tuple = ((96, 96, 96), (97, 61, 43), (64, 96, 48), (101, 53, 37))
+    sweep_k: int = 4           # thresholds per sweep request
+
+
+def full_config() -> ServeTopologyConfig:
+    return ServeTopologyConfig()
+
+
+def smoke_config() -> ServeTopologyConfig:
+    return ServeTopologyConfig(
+        name="serve-topology-smoke", max_batch=16,
+        shapes=((17, 13, 11), (13, 11, 7), (16, 12, 8)), sweep_k=3)

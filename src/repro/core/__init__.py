@@ -1,22 +1,73 @@
-"""Core library: Distributed Path Compression (Will et al., CS.DC 2024)."""
+"""Core library: Distributed Path Compression (Will et al., CS.DC 2024).
+
+The seven historical query entry points (`connected_components_grid`,
+`connected_components_graph`, `ms_segmentation`, `ms_segmentation_graph`,
+`distributed_manifold`, `distributed_connected_components`,
+`distributed_connected_components_graph`) are superseded by the unified
+`repro.topology` facade (`TopologyRequest` / `TopologyResult` / `submit`)
+and remain here as thin deprecation shims — bit-identical behaviour, plus a
+`DeprecationWarning` pointing at the facade route that replaces them.
+"""
+import functools
+import warnings
+
 from .ids import compute_order, inverse_permutation, flat_ids, compact_labels
 from .pathcompress import (path_compress, path_compress_unrolled, jump,
                            is_converged)
 from .steepest import (grid_steepest, grid_mask_argmax, graph_steepest,
                        graph_mask_argmax, neighbor_offsets, shift_fill)
-from .ms_segmentation import (ms_segmentation, ms_segmentation_graph,
-                              descending_manifold, ascending_manifold,
+from . import ms_segmentation as _ms
+from .ms_segmentation import (descending_manifold, ascending_manifold,
                               extrema, MSSegmentation)
-from .connected_components import (connected_components_grid,
-                                   connected_components_graph,
-                                   component_sizes, CCResult)
+from . import connected_components as _cc
+from .connected_components import component_sizes, CCResult
 from .baseline_cc import label_propagation_grid, extract_masked_edges
-from .distributed import (distributed_manifold,
-                          distributed_connected_components,
-                          make_dpc_mesh, BlockDecomp, DPCStats, AXIS,
-                          BLOCK_AXES)
-from .distributed_graph import (distributed_connected_components_graph,
-                                GraphDecomp, GraphDPCStats)
+from . import distributed as _dist
+from .distributed import (distributed_manifold_batch,
+                          distributed_connected_components_batch,
+                          make_dpc_mesh, BlockDecomp, AXIS, BLOCK_AXES)
+from . import distributed_graph as _dist_graph
+from .distributed_graph import (distributed_connected_components_graph_batch,
+                                GraphDecomp)
+from .stats import DPCStats, GraphDPCStats, STAT_FIELDS, stats_as_dict
+
+
+def _facade_shim(fn, route):
+    """Wrap a legacy query entry point: same behaviour, plus a
+    DeprecationWarning naming the `repro.topology` route that replaces it."""
+    @functools.wraps(fn)
+    def shim(*args, **kwargs):
+        warnings.warn(
+            f"repro.core.{fn.__name__} is deprecated as a public entry "
+            f"point; submit repro.topology.TopologyRequest({route}) via "
+            "repro.topology.submit (or the batched repro.serve engine) "
+            "instead — the legacy call stays bit-identical underneath",
+            DeprecationWarning, stacklevel=2)
+        return fn(*args, **kwargs)
+    return shim
+
+
+connected_components_grid = _facade_shim(
+    _cc.connected_components_grid,
+    "query='cc', domain='grid', backend='pure'")
+connected_components_graph = _facade_shim(
+    _cc.connected_components_graph,
+    "query='cc', domain='graph', backend='pure'")
+ms_segmentation = _facade_shim(
+    _ms.ms_segmentation,
+    "query='ms', domain='grid', backend='pure'")
+ms_segmentation_graph = _facade_shim(
+    _ms.ms_segmentation_graph,
+    "query='ms', domain='graph', backend='pure'")
+distributed_manifold = _facade_shim(
+    _dist.distributed_manifold,
+    "query='manifold', domain='grid', backend='distributed'")
+distributed_connected_components = _facade_shim(
+    _dist.distributed_connected_components,
+    "query='cc', domain='grid', backend='distributed'")
+distributed_connected_components_graph = _facade_shim(
+    _dist_graph.distributed_connected_components_graph,
+    "query='cc', domain='graph', backend='distributed'")
 
 __all__ = [
     "compute_order", "inverse_permutation", "flat_ids", "compact_labels",
@@ -29,6 +80,9 @@ __all__ = [
     "component_sizes", "CCResult",
     "label_propagation_grid", "extract_masked_edges",
     "distributed_manifold", "distributed_connected_components",
+    "distributed_manifold_batch", "distributed_connected_components_batch",
     "make_dpc_mesh", "BlockDecomp", "DPCStats", "AXIS", "BLOCK_AXES",
-    "distributed_connected_components_graph", "GraphDecomp", "GraphDPCStats",
+    "distributed_connected_components_graph",
+    "distributed_connected_components_graph_batch",
+    "GraphDecomp", "GraphDPCStats", "STAT_FIELDS", "stats_as_dict",
 ]

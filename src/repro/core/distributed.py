@@ -52,7 +52,6 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import NamedTuple
 
 import numpy as np
 import jax
@@ -63,28 +62,13 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ._shardmap import shard_map_norep
 from ._table import (pointer_chase, make_group_max, hook_propagate,
                      value_substitute)
+from .stats import DPCStats
 from .steepest import (grid_steepest, grid_mask_argmax, neighbor_offsets,
                        shift_fill)
 from .pathcompress import path_compress
 
 AXIS = "shards"                 # legacy 1-D axis name (make_flat_mesh interop)
 BLOCK_AXES = ("bx", "by", "bz")  # axis names used by make_dpc_mesh layouts
-
-
-class DPCStats(NamedTuple):
-    local_iters: jax.Array      # pointer-doubling rounds in the local phase
-    table_iters: jax.Array      # rounds on the gathered ghost table
-    stitch_rounds: jax.Array    # CC only (0 for MS)
-    ghost_bytes: jax.Array      # in-domain bytes all-gathered (the ONE comm
-                                # phase; pad slots excluded, deviation (p))
-    masked_ghost_fraction: jax.Array  # CC: fraction of boundary actually
-                                      # masked (over in-domain slots)
-    pad_fraction: jax.Array     # fraction of block cells that are padding
-                                # (0 whenever the layout divides the grid)
-    comm_phases: jax.Array      # bulk exchange phases traced (paper budget:
-                                # 1; the halo ppermute is ghost setup, not a
-                                # gather phase)
-
 
 _N_STATS = len(DPCStats._fields)
 
@@ -586,3 +570,58 @@ def distributed_connected_components(mask, mesh: Mesh, connectivity: int = 6,
                              (spec, DPCStats(*([P()] * _N_STATS))))
     labels, stats = mapped(mask)
     return _unpad_output(labels, dec), stats
+
+
+# --- batched (multi-tenant) entry points --------------------------------------
+# One shard_map over a request-leading batch dim: the per-block program is
+# vmapped, so the halo ppermutes and the ONE boundary all_gather each fire
+# once for the whole batch — compilation AND the communication phase are
+# amortised across tenants (the serving-engine contract, DESIGN.md §Serve).
+# Labels are bit-identical per item to the single-request entry points; the
+# returned DPCStats carry a leading (B,) request dim.
+
+
+def _pad_input_batch(x, dec: BlockDecomp, fill):
+    """`_pad_input` for a (B, *grid) stack (grid axes shifted right by 1)."""
+    if not dec.ragged:
+        return x
+    pads = [(0, 0)] + [(0, dec.padded[i] - dec.grid[i])
+                       for i in range(dec.ndim)]
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+def _batched_block_call(fn, mesh, dec: BlockDecomp, x):
+    spec = P(None, *dec.names, *([None] * (x.ndim - 1 - dec.k)))
+    mapped = shard_map_norep(jax.vmap(fn), mesh, (spec,),
+                             (spec, DPCStats(*([P(None)] * _N_STATS))))
+    labels, stats = mapped(x)
+    if dec.ragged:
+        labels = labels[(slice(None),) + tuple(slice(0, g) for g in dec.grid)]
+    return labels, stats
+
+
+def distributed_manifold_batch(orders, mesh: Mesh, connectivity: int = 6,
+                               descending: bool = True):
+    """Batched `distributed_manifold`: orders is a (B, *grid) stack of order
+    fields sharing one extent; returns ((B, *grid) labels, DPCStats with a
+    leading (B,) dim).  Per item bit-identical to the single-request call."""
+    dec = _decomp_for(mesh, orders.shape[1:])
+    if not descending:
+        orders = dec.size - 1 - orders  # ascending = descending on flipped
+    orders = _pad_input_batch(orders, dec, -1)
+    fn = partial(_manifold_block, dec=dec, connectivity=connectivity)
+    return _batched_block_call(fn, mesh, dec, orders)
+
+
+def distributed_connected_components_batch(masks, mesh: Mesh,
+                                           connectivity: int = 6,
+                                           gather_mask: bool = True):
+    """Batched `distributed_connected_components`: masks is a (B, *grid)
+    stack of feature masks sharing one extent; returns ((B, *grid) labels,
+    DPCStats with a leading (B,) dim).  Per item bit-identical to the
+    single-request call."""
+    dec = _decomp_for(mesh, masks.shape[1:])
+    masks = _pad_input_batch(masks, dec, False)
+    fn = partial(_cc_block, dec=dec, connectivity=connectivity,
+                 gather_mask=gather_mask)
+    return _batched_block_call(fn, mesh, dec, masks)

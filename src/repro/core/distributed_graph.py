@@ -41,7 +41,6 @@ into the program (the paper's budget: exactly one).
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
 
 import numpy as np
 import jax
@@ -52,21 +51,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ._shardmap import shard_map_norep
 from ._table import (pointer_chase, make_group_max, hook_propagate,
                      value_substitute)
+from .stats import GraphDPCStats
 from .steepest import graph_mask_argmax
 from .connected_components import _cc_fixpoint, _graph_stitch
-
-
-class GraphDPCStats(NamedTuple):
-    local_iters: jax.Array      # pointer-doubling rounds in the local phase
-    table_iters: jax.Array      # chase + propagate rounds on the cut table
-    stitch_rounds: jax.Array    # local stitch fixpoint rounds
-    ghost_bytes: jax.Array      # real cut bytes all-gathered (the ONE comm
-                                # phase; pad slots excluded, deviation (p))
-    masked_ghost_fraction: jax.Array  # fraction of REAL cut slots masked
-    comm_phases: jax.Array      # all_gather phases traced (paper budget: 1)
-    pad_fraction: jax.Array     # fraction of owned slots that are padding
-                                # (0 for a balanced partition)
-
 
 _N_STATS = len(GraphDPCStats._fields)
 
@@ -385,4 +372,64 @@ def distributed_connected_components_graph(mask, decomp: GraphDecomp,
     labels = jnp.zeros(decomp.n, dtype=dt).at[
         jnp.asarray(decomp.owned_gid.reshape(-1))].set(
         owned_stack.reshape(-1), mode="drop")
+    return labels, stats
+
+
+def distributed_connected_components_graph_batch(masks, decomp: GraphDecomp,
+                                                 mesh: Mesh,
+                                                 gather_mask: bool = True):
+    """Batched `distributed_connected_components_graph`: masks is a (B, n)
+    stack of feature masks over ONE decomposed mesh (the multi-tenant
+    serving case: many masks / thresholds of the same geometry).  The
+    per-partition program is vmapped inside one shard_map, so the single
+    cut-table all_gather fires once for the whole batch (DESIGN.md §Serve).
+    Returns ((B, n) labels, GraphDPCStats with a leading (B,) dim); per item
+    bit-identical to the single-request call.
+    """
+    names = tuple(mesh.axis_names)
+    if len(names) != 1:
+        raise ValueError(f"graph CC needs a 1-D mesh, got axes {names}")
+    name = names[0]
+    if int(mesh.shape[name]) != decomp.nparts:
+        raise ValueError(f"mesh has {mesh.shape[name]} devices but decomp "
+                         f"has {decomp.nparts} partitions")
+    dt = decomp.id_dtype
+    masks = masks.reshape(masks.shape[0], -1).astype(bool)
+    if masks.shape[1] != decomp.n:
+        raise ValueError(f"masks have {masks.shape[1]} entries for "
+                         f"{decomp.n} vertices")
+    B = masks.shape[0]
+
+    lgid = jnp.asarray(decomp.local_gid, dtype=dt)
+    valid = jnp.asarray(decomp.local_valid)
+    # (nparts, B, n_local): the ghost-input scatter (deviation (g1)) for
+    # every request at once
+    local_mask = jnp.where(valid[:, None, :],
+                           masks[:, jnp.clip(lgid, 0)].transpose(1, 0, 2),
+                           False)
+
+    part_fn = partial(_cc_partition, dec=decomp, name=name,
+                      gather_mask=gather_mask)
+
+    def fn(local_mask, lgid, ghost, ol, es, er, cl):
+        # local_mask: (1, B, n_local); the rest carry the singleton shard dim
+        def one(m):
+            return part_fn(m[None], lgid, ghost, ol, es, er, cl)
+        owned, stats = jax.vmap(one)(local_mask[0])   # owned: (B, 1, n_owned)
+        return owned.transpose(1, 0, 2), stats
+
+    spec = P(name, None)
+    bspec = P(name, None, None)
+    mapped = shard_map_norep(
+        fn, mesh, (bspec,) + (spec,) * 6,
+        (bspec, GraphDPCStats(*([P(None)] * _N_STATS))))
+    owned_stack, stats = mapped(
+        local_mask, lgid, jnp.asarray(decomp.local_ghost),
+        jnp.asarray(decomp.owned_lidx),
+        jnp.asarray(decomp.edge_src), jnp.asarray(decomp.edge_dst),
+        jnp.asarray(decomp.cut_lidx))
+
+    labels = jnp.zeros((B, decomp.n), dtype=dt).at[
+        :, jnp.asarray(decomp.owned_gid.reshape(-1))].set(
+        owned_stack.transpose(1, 0, 2).reshape(B, -1), mode="drop")
     return labels, stats

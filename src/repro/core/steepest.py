@@ -76,14 +76,20 @@ def grid_steepest(order: jax.Array, connectivity: int = 6,
     dtype = jnp.int32 if n < 2**31 else jnp.int64
     idx = (jnp.arange(n, dtype=dtype) + id_offset).reshape(order.shape)
     fill_key = jnp.iinfo(key.dtype).min
-    best_val, best_idx = key, idx
-    for off in neighbor_offsets(order.ndim, connectivity):
-        cand_val = shift_fill(key, off, fill_key)
-        cand_idx = shift_fill(idx, off, -1)
-        better = cand_val > best_val
-        best_val = jnp.where(better, cand_val, best_val)
-        best_idx = jnp.where(better, cand_idx, best_idx)
-    return best_idx.ravel()
+    # Stacked candidates + one argmax instead of a chain of per-offset
+    # selects: the chained-where form sends XLA:CPU fusion into minutes-long
+    # compiles at connectivity 14 (and pathologically so under vmap — the
+    # batched serving path).  Self is candidate 0, so the first-max-wins tie
+    # rule of argmax matches the strict-> chain: real order values are unique
+    # (permutation precondition), and the only repeatable value is the pad
+    # sentinel -1, where self wins in both forms.
+    offs = neighbor_offsets(order.ndim, connectivity)
+    cand_val = jnp.stack([key] + [shift_fill(key, off, fill_key)
+                                  for off in offs])
+    cand_idx = jnp.stack([idx] + [shift_fill(idx, off, dtype(-1))
+                                  for off in offs])
+    choice = jnp.argmax(cand_val, axis=0)
+    return jnp.take_along_axis(cand_idx, choice[None], axis=0)[0].ravel()
 
 
 def grid_mask_argmax(mask: jax.Array, connectivity: int = 6,

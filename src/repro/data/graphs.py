@@ -268,7 +268,7 @@ def component_labels(batch):
     (mask = node_mask).  Used by the pipeline for sanity metrics (e.g. the
     number of disconnected fragments a sampler produced)."""
     import jax.numpy as jnp
-    from repro.core import connected_components_graph
+    from repro.core.connected_components import connected_components_graph
     res = connected_components_graph(
         jnp.asarray(batch["node_mask"]),
         jnp.asarray(batch["senders"]), jnp.asarray(batch["receivers"]))

@@ -309,8 +309,8 @@ def build_bst_cell(arch_id, mod, shape_name, shape, mesh, smoke) -> Cell:
 
 
 def build_dpc_cell(arch_id, mod, shape_name, shape, mesh, smoke) -> Cell:
-    from repro.core import (distributed_manifold,
-                            distributed_connected_components)
+    from repro.core.distributed import (distributed_manifold,
+                                        distributed_connected_components)
     from repro.launch.mesh import make_block_mesh
     cfg = mod.smoke_config() if smoke else mod.full_config()
     dims = shape["dims"]
@@ -362,8 +362,8 @@ def build_dpc_graph_cell(arch_id, mod, shape_name, shape, mesh, smoke) -> Cell:
     """Distributed CC on an unstructured edge-list mesh: a 1-D vertex
     partition over the flattened device mesh (DESIGN.md §5; the partition
     geometry is table-driven, so no block lattice applies)."""
-    from repro.core import (GraphDecomp,
-                            distributed_connected_components_graph)
+    from repro.core.distributed_graph import (
+        GraphDecomp, distributed_connected_components_graph)
     from repro.data import grid_edge_list
     from repro.data.graphs import random_csr
     cfg = mod.smoke_config() if smoke else mod.full_config()

@@ -1,11 +1,19 @@
-"""Batched-serving launcher: prefill + decode loop with a KV cache.
+"""Batched-serving launcher.
 
+Two serving modes share this entry point:
+
+  # LM prefill + decode loop with a KV cache (original mode)
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --batch 4 --prompt-len 32 --gen 16
+
+  # Batched multi-tenant topology queries (DESIGN.md §Serve)
+  PYTHONPATH=src python -m repro.launch.serve --topology --smoke \
+      --requests 24 --repeat 2
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -18,16 +26,7 @@ from repro.launch.mesh import make_smoke_mesh
 from repro.runtime.meshctx import use_mesh
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
+def serve_lm(args):
     mod = configs.get(args.arch)
     cfg = mod.smoke_config() if args.smoke else mod.full_config()
     key = jax.random.PRNGKey(args.seed)
@@ -62,6 +61,64 @@ def main(argv=None):
     print("[serve] sample continuation ids:", toks[0][:12])
     assert np.isfinite(np.asarray(logits)).all()
     return tps
+
+
+def serve_topology(args):
+    """Drive the batched topology engine over a synthetic mixed workload.
+
+    `--repeat` replays the same request sequence (same layouts, so the same
+    bucket occupancies), and the second pass is served entirely from the
+    executable cache — the printed hit rate is the number to watch on
+    repeated-layout traffic.
+    """
+    from repro.serve import TopologyEngine
+    from repro.serve.workload import synthetic_requests
+
+    mod = configs.get("serve_topology")
+    cfg = mod.smoke_config() if args.smoke else mod.full_config()
+    eng = TopologyEngine(min_extent=cfg.min_extent, max_batch=cfg.max_batch)
+
+    t_total = 0.0
+    n_total = 0
+    for rep in range(args.repeat):
+        reqs = synthetic_requests(
+            args.requests, cfg.shapes, mix=cfg.mix,
+            connectivity=cfg.connectivity, sweep_k=cfg.sweep_k,
+            seed=args.seed)
+        t0 = time.perf_counter()
+        results = eng.submit_batch(reqs)
+        dt = time.perf_counter() - t0
+        t_total += dt
+        n_total += len(results)
+        info = eng.stats.as_dict()
+        print(f"[serve-topology] pass {rep}: {len(results)} requests in "
+              f"{dt * 1e3:.1f}ms ({len(results) / max(dt, 1e-9):.1f} req/s); "
+              f"cumulative hit_rate={info['hit_rate']:.2f} "
+              f"pad_fraction={info['pad_fraction']:.2f}")
+    print("[serve-topology] engine stats:",
+          json.dumps(eng.stats.as_dict(), sort_keys=True))
+    return n_total / max(t_total, 1e-9)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--topology", action="store_true",
+                    help="serve batched CC/MS topology queries instead of LM")
+    ap.add_argument("--requests", type=int, default=24,
+                    help="topology mode: requests per pass")
+    ap.add_argument("--repeat", type=int, default=2,
+                    help="topology mode: workload passes (2nd hits the "
+                         "executable cache)")
+    args = ap.parse_args(argv)
+    if args.topology:
+        return serve_topology(args)
+    return serve_lm(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,14 @@
+"""Batched multi-tenant topology serving (DESIGN.md §Serve).
+
+    from repro.serve import TopologyEngine
+    from repro.topology import TopologyRequest
+
+    eng = TopologyEngine()
+    results = eng.submit_batch([TopologyRequest("cc", mask=m), ...])
+    eng.stats.as_dict()   # requests/batches, cache hit rate, pad waste
+"""
+from .engine import TopologyEngine, EngineStats
+from .bucketing import bucket_shape, batch_capacity, remap_flat_labels
+
+__all__ = ["TopologyEngine", "EngineStats", "bucket_shape",
+           "batch_capacity", "remap_flat_labels"]

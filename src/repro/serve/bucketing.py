@@ -1,0 +1,66 @@
+"""Layout bucketing for the batched topology engine (DESIGN.md §Serve).
+
+Heterogeneous request extents are quantised to a small set of padded
+layouts so that a handful of compiled executables serves every tenant:
+each grid extent rounds up to the next power of two (floored at
+`min_extent`), and the request count of a bucket rounds up to the next
+power-of-two batch capacity.  The pad region is filled with the same inert
+sentinels the distributed pad-and-mask path uses (mask False / order -1,
+deviation (p) in DESIGN.md), so padding can never win an argmax, and the
+capacity slack is filled with all-inert dummy items.
+
+Because row-major raveling is the lexicographic order of the coordinates,
+padding extents preserves the relative flat-id order of the real vertices;
+label VALUES (largest-member flat ids) from a padded run are mapped back to
+real-extent flat ids by `remap_flat_labels` — unravel in the padded shape,
+ravel in the real shape — which lands exactly on the ids the unpadded
+legacy call produces (the engine's bit-parity contract).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
+def bucket_shape(shape, min_extent: int = 8) -> tuple:
+    """Padded layout a request of `shape` is served under."""
+    return tuple(max(next_pow2(s), min_extent) for s in shape)
+
+
+def batch_capacity(n_items: int, max_batch: int = 64) -> int:
+    """Padded batch size of a bucket occupancy (pow2, capped)."""
+    return min(next_pow2(n_items), max_batch)
+
+
+def pad_to(x: np.ndarray, shape, fill) -> np.ndarray:
+    """Pad a single payload up to its bucket shape with an inert fill."""
+    if tuple(x.shape) == tuple(shape):
+        return x
+    pads = [(0, t - s) for s, t in zip(x.shape, shape)]
+    return np.pad(x, pads, constant_values=fill)
+
+
+def remap_flat_labels(labels, padded_shape, real_shape) -> np.ndarray:
+    """Slice a padded label grid to the real extent and rewrite label values
+    from padded-shape flat ids to real-shape flat ids (identity when the
+    shapes agree).  Entries < 0 (unmasked) are preserved."""
+    out = np.asarray(labels)[tuple(slice(0, s) for s in real_shape)]
+    if tuple(padded_shape) == tuple(real_shape):
+        return out
+    out = out.copy()
+    pos = out >= 0
+    if pos.any():
+        coords = np.unravel_index(out[pos].astype(np.int64), padded_shape)
+        out[pos] = np.ravel_multi_index(coords, real_shape).astype(out.dtype)
+    return out
+
+
+def pad_waste(real_shapes, padded_shape, capacity) -> tuple:
+    """(real_cells, padded_cells) of one bucket execution."""
+    real = sum(math.prod(s) for s in real_shapes)
+    return real, math.prod(padded_shape) * capacity

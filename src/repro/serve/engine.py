@@ -1,0 +1,336 @@
+"""Batched multi-tenant topology query engine (DESIGN.md §Serve).
+
+`TopologyEngine.submit_batch` takes heterogeneous `TopologyRequest`s (mixed
+shapes, mixed query kinds) and serves them through a handful of compiled
+executables:
+
+  expand   every request unbundles into uniform work items: an MS request
+           becomes its two manifold directions, a threshold sweep becomes
+           one CC item per threshold (the K masks come from ONE broadcast
+           compare against the single field), ascending manifolds are
+           flipped host-side so every manifold item runs the descending
+           program (the trick `core.distributed` already uses);
+  bucket   items group by padded layout — extents round up to the next
+           power of two (`serve.bucketing`), so arbitrary request shapes
+           collapse onto few layouts; graph items group by their mesh
+           geometry (many masks / thresholds of one mesh batch together);
+  execute  one vmapped (pure) or batched-`shard_map` (distributed) call per
+           bucket chunk, so compilation AND the paper's single boundary
+           all_gather amortise across tenants; compiled executables are
+           cached per (layout, capacity) key with hit/miss counters;
+  restore  labels slice back to each request's real extent and label VALUES
+           remap from padded-shape flat ids to real-shape flat ids, which
+           makes every engine result BIT-IDENTICAL to the sequential
+           `repro.topology.submit` path (pinned by tests/test_serve_engine.py).
+
+`EngineStats` aggregates requests/items/batches, executable-cache hits and
+misses, and pad waste (real vs padded cells — the bounded-padding budget).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core.connected_components import (connected_components_grid,
+                                         connected_components_graph)
+from ..core.ms_segmentation import descending_manifold
+from ..core.steepest import graph_steepest
+from ..core.pathcompress import path_compress
+from ..core.distributed import (distributed_connected_components_batch,
+                                distributed_manifold_batch)
+from ..core.distributed_graph import (
+    distributed_connected_components_graph_batch)
+from ..topology import TopologyRequest, TopologyResult
+from .bucketing import (bucket_shape, batch_capacity, pad_to,
+                        remap_flat_labels, pad_waste)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Aggregate serving counters (host-side, monotonically increasing)."""
+    requests: int = 0
+    items: int = 0          # work items after expansion (ms=2, sweep=K)
+    batches: int = 0        # bucket-chunk executions
+    cache_hits: int = 0     # executable reused for a bucket execution
+    cache_misses: int = 0   # executable compiled for a new layout key
+    real_cells: int = 0     # payload cells actually requested
+    padded_cells: int = 0   # cells executed after layout + batch padding
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+    @property
+    def pad_fraction(self) -> float:
+        return (1.0 - self.real_cells / self.padded_cells
+                if self.padded_cells else 0.0)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hit_rate"] = self.hit_rate
+        d["pad_fraction"] = self.pad_fraction
+        return d
+
+
+@dataclasses.dataclass
+class _WorkItem:
+    """One uniform unit of work after request expansion."""
+    kind: str               # "cc" | "manifold" (ms and sweeps are expanded)
+    domain: str
+    backend: str
+    payload: np.ndarray     # real-extent mask (bool) / order field (int;
+                            # ascending already flipped host-side)
+    connectivity: int
+    gather_mask: bool
+    mesh: Any               # distributed only
+    decomp: Any             # distributed graph only
+    senders: Any            # graph only
+    receivers: Any          # graph only
+    req_idx: int
+    role: tuple             # ("labels",) | ("desc",) | ("asc",) |
+                            # ("sweep", k)
+
+
+class TopologyEngine:
+    """Batched serving front-end for `TopologyRequest`s.
+
+    min_extent: smallest padded grid extent (bucket floor).
+    max_batch:  largest batch capacity per execution; bucket occupancies
+                beyond it run in chunks.
+    """
+
+    def __init__(self, min_extent: int = 8, max_batch: int = 64):
+        self.min_extent = int(min_extent)
+        self.max_batch = int(max_batch)
+        self.stats = EngineStats()
+        self._exec: dict = {}          # exec key -> (callable, has_stats)
+        self._bucket_runs: dict = {}   # exec key -> executions served
+
+    # --- public API -----------------------------------------------------------
+
+    def submit(self, request: TopologyRequest) -> TopologyResult:
+        return self.submit_batch([request])[0]
+
+    def submit_batch(self, requests) -> list:
+        """Serve a batch of requests; results keep submission order and are
+        bit-identical to `repro.topology.submit` per request."""
+        for r in requests:
+            r.validate()
+        items = []
+        for idx, req in enumerate(requests):
+            items.extend(self._expand(idx, req))
+        self.stats.requests += len(requests)
+        self.stats.items += len(items)
+
+        buckets: dict = {}
+        for it in items:
+            buckets.setdefault(self._bucket_key(it), []).append(it)
+
+        outputs: dict = {}   # (req_idx, role) -> (labels np, stats or None)
+        for key, group in buckets.items():
+            for lo in range(0, len(group), self.max_batch):
+                self._run_bucket(key, group[lo:lo + self.max_batch], outputs)
+
+        return [self._assemble(idx, req, outputs)
+                for idx, req in enumerate(requests)]
+
+    def cache_info(self) -> dict:
+        return {"hits": self.stats.cache_hits,
+                "misses": self.stats.cache_misses,
+                "size": len(self._exec),
+                "hit_rate": self.stats.hit_rate,
+                "runs_per_executable": dict(self._bucket_runs)}
+
+    # --- request expansion ----------------------------------------------------
+
+    def _expand(self, idx: int, req: TopologyRequest) -> list:
+        def item(kind, payload, role):
+            return _WorkItem(kind=kind, domain=req.domain,
+                             backend=req.backend,
+                             payload=payload, connectivity=req.connectivity,
+                             gather_mask=req.gather_mask, mesh=req.mesh,
+                             decomp=req.decomp, senders=req.senders,
+                             receivers=req.receivers, req_idx=idx, role=role)
+
+        if req.query in ("manifold", "ms") and (
+                req.domain == "graph" and req.backend == "distributed"):
+            raise NotImplementedError(
+                "manifold/MS on distributed graphs needs the order-field "
+                "halo through GraphDecomp's ghost layer (ROADMAP carried "
+                "item)")
+
+        if req.query == "cc":
+            return [item("cc", np.asarray(req.mask, dtype=bool),
+                         ("labels",))]
+        if req.query == "manifold":
+            order = np.asarray(req.order)
+            if not req.descending:
+                order = np.asarray(order.size - 1 - order, dtype=order.dtype)
+            return [item("manifold", order, ("labels",))]
+        if req.query == "ms":
+            order = np.asarray(req.order)
+            flipped = np.asarray(order.size - 1 - order, dtype=order.dtype)
+            return [item("manifold", order, ("desc",)),
+                    item("manifold", flipped, ("asc",))]
+        # threshold_sweep: K masks from ONE broadcast compare of the single
+        # field; each enters the shared cc bucket of its layout
+        field = np.asarray(req.field)
+        thr = np.asarray(req.thresholds).reshape(-1)
+        masks = field[None] > thr.reshape((-1,) + (1,) * field.ndim)
+        return [item("cc", masks[k], ("sweep", k))
+                for k in range(thr.size)]
+
+    # --- bucketing / executables ----------------------------------------------
+
+    def _bucket_key(self, it: _WorkItem) -> tuple:
+        if it.domain == "grid":
+            mesh_key = (None if it.backend == "pure"
+                        else (tuple(it.mesh.axis_names),
+                              tuple(it.mesh.devices.shape), id(it.mesh)))
+            return ("grid", it.backend, it.kind, it.connectivity,
+                    it.gather_mask,
+                    bucket_shape(it.payload.shape, self.min_extent),
+                    mesh_key)
+        if it.backend == "pure":
+            # same-geometry masks batch together; the compiled executable is
+            # nonetheless shared across graphs of equal (n, m) because the
+            # edge lists are traced arguments (see _exec_key)
+            graph_key = (it.payload.shape[0], np.asarray(it.senders).size,
+                         id(it.senders), id(it.receivers))
+        else:
+            graph_key = (id(it.decomp), it.gather_mask)
+        return ("graph", it.backend, it.kind, graph_key)
+
+    def _exec_key(self, bkey: tuple, it: _WorkItem, capacity: int) -> tuple:
+        if bkey[0] == "graph" and bkey[1] == "pure":
+            # drop the edge-list identity: (n, m) + dtypes determine the
+            # trace, so equal-shape graphs share one executable
+            bkey = bkey[:3] + ((it.payload.shape[0],
+                                np.asarray(it.senders).size),)
+        return bkey + (capacity, str(it.payload.dtype))
+
+    def _build_executable(self, it: _WorkItem):
+        """(callable, has_stats) for one layout bucket.  The callable takes
+        the stacked padded payload (plus edge lists for pure graphs) and
+        returns (labels, stats-or-None)."""
+        conn, gm = it.connectivity, it.gather_mask
+        if it.domain == "grid":
+            if it.backend == "pure":
+                if it.kind == "cc":
+                    one = lambda m: connected_components_grid(m, conn).labels
+                else:
+                    one = lambda o: descending_manifold(o, conn)[0].reshape(
+                        o.shape)
+                return jax.jit(jax.vmap(one)), False
+            mesh = it.mesh
+            if it.kind == "cc":
+                fn = lambda b: distributed_connected_components_batch(
+                    b, mesh, conn, gm)
+            else:
+                fn = lambda b: distributed_manifold_batch(
+                    b, mesh, conn, descending=True)
+            return jax.jit(fn), True
+        if it.backend == "pure":
+            if it.kind == "cc":
+                one = lambda m, s, r: connected_components_graph(
+                    m, s, r).labels
+            else:
+                one = lambda o, s, r: path_compress(
+                    graph_steepest(o, s, r, descending=True))[0]
+            return jax.jit(jax.vmap(one, in_axes=(0, None, None))), False
+        decomp, mesh = it.decomp, it.mesh
+        fn = lambda b: distributed_connected_components_graph_batch(
+            b, decomp, mesh, gm)
+        return jax.jit(fn), True
+
+    # --- execution ------------------------------------------------------------
+
+    def _run_bucket(self, bkey: tuple, group: list, outputs: dict) -> None:
+        it0 = group[0]
+        capacity = batch_capacity(len(group), self.max_batch)
+        ekey = self._exec_key(bkey, it0, capacity)
+        if ekey in self._exec:
+            self.stats.cache_hits += 1
+        else:
+            self.stats.cache_misses += 1
+            self._exec[ekey] = self._build_executable(it0)
+        self._bucket_runs[ekey] = self._bucket_runs.get(ekey, 0) + 1
+        fn, has_stats = self._exec[ekey]
+        self.stats.batches += 1
+
+        if it0.domain == "grid":
+            padded = bucket_shape(it0.payload.shape, self.min_extent)
+            fill = False if it0.kind == "cc" else -1
+            stack = np.stack(
+                [pad_to(np.asarray(g.payload), padded, fill)
+                 for g in group]
+                + [np.full(padded, fill, dtype=it0.payload.dtype)]
+                * (capacity - len(group)))
+            real, padded_cells = pad_waste(
+                [g.payload.shape for g in group], padded, capacity)
+        else:
+            padded = it0.payload.shape          # graphs never pad the extent
+            fill = False if it0.kind == "cc" else -1
+            stack = np.stack(
+                [np.asarray(g.payload) for g in group]
+                + [np.full(padded, fill, dtype=it0.payload.dtype)]
+                * (capacity - len(group)))
+            real, padded_cells = pad_waste(
+                [g.payload.shape for g in group], padded, capacity)
+        self.stats.real_cells += real
+        self.stats.padded_cells += padded_cells
+
+        if it0.domain == "graph" and it0.backend == "pure":
+            out = fn(jnp.asarray(stack), jnp.asarray(it0.senders),
+                     jnp.asarray(it0.receivers))
+        else:
+            out = fn(jnp.asarray(stack))
+        labels, stats = out if has_stats else (out, None)
+        labels = np.asarray(jax.block_until_ready(labels))
+
+        for pos, g in enumerate(group):
+            lab = (remap_flat_labels(labels[pos], padded, g.payload.shape)
+                   if g.domain == "grid" else labels[pos])
+            st = (None if stats is None else
+                  {f: np.asarray(v)[pos].item()
+                   for f, v in zip(stats._fields, stats)})
+            outputs[(g.req_idx, g.role)] = (lab, st)
+
+    # --- result assembly ------------------------------------------------------
+
+    def _assemble(self, idx: int, req: TopologyRequest,
+                  outputs: dict) -> TopologyResult:
+        if req.query in ("cc", "manifold"):
+            lab, st = outputs[(idx, ("labels",))]
+            return TopologyResult(req.query, labels=jnp.asarray(lab),
+                                  stats=st, tag=req.tag)
+        if req.query == "ms":
+            desc, st_d = outputs[(idx, ("desc",))]
+            asc, st_a = outputs[(idx, ("asc",))]
+            n = math.prod(desc.shape)
+            dt = np.int64 if jax.config.jax_enable_x64 else np.int32
+            seg = desc.astype(dt) * dt(n) + asc.astype(dt)
+            stats = (None if st_d is None
+                     else {"descending": st_d, "ascending": st_a})
+            return TopologyResult("ms", ascending=jnp.asarray(asc),
+                                  descending=jnp.asarray(desc),
+                                  segmentation=jnp.asarray(seg),
+                                  stats=stats, tag=req.tag)
+        # threshold_sweep
+        thr = np.asarray(req.thresholds).reshape(-1)
+        labs, sts = [], []
+        for k in range(thr.size):
+            lab, st = outputs[(idx, ("sweep", k))]
+            labs.append(lab)
+            sts.append(st)
+        stats = (None if sts[0] is None else
+                 {f: [s[f] for s in sts] for f in sts[0]})
+        return TopologyResult("threshold_sweep",
+                              labels=jnp.asarray(np.stack(labs)),
+                              stats=stats, tag=req.tag)

@@ -1,0 +1,55 @@
+"""Deterministic synthetic request workloads for the topology engine.
+
+Shared by the throughput benchmark (`benchmarks/run.py serve_throughput`),
+the serving launcher (`python -m repro.launch.serve --topology`) and the
+runnable demo (`examples/serve_topology.py`): a seeded mix of CC /
+MS-segmentation / threshold-sweep requests over a rotating set of grid
+extents — the "many small heterogeneous tenants" traffic shape the engine
+buckets.  Every request is a pure function of (seed, index), so repeated
+workloads exercise the executable cache the way real repeated-layout
+traffic does.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..core.ids import compute_order
+from ..topology import TopologyRequest
+
+
+def synthetic_requests(n_requests: int, shapes, mix=None, connectivity=6,
+                       sweep_k: int = 4, seed: int = 0, backend: str = "pure",
+                       mesh=None) -> list:
+    """A deterministic list of mixed TopologyRequests.
+
+    shapes: tuple of grid extents to rotate through; mix: tuple of
+    (query, weight) over {"cc", "ms", "manifold", "threshold_sweep"}.
+    """
+    mix = mix or (("cc", 0.5), ("ms", 0.2), ("manifold", 0.1),
+                  ("threshold_sweep", 0.2))
+    queries = [q for q, _ in mix]
+    weights = np.asarray([w for _, w in mix], dtype=float)
+    weights = weights / weights.sum()
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        shape = shapes[int(rng.integers(len(shapes)))]
+        query = queries[int(rng.choice(len(queries), p=weights))]
+        field = rng.standard_normal(shape)
+        common = dict(connectivity=connectivity, backend=backend, mesh=mesh,
+                      tag=i)
+        if query == "cc":
+            reqs.append(TopologyRequest(
+                "cc", mask=jnp.asarray(field > rng.uniform(-0.5, 0.5)),
+                **common))
+        elif query in ("ms", "manifold"):
+            reqs.append(TopologyRequest(
+                query, order=compute_order(jnp.asarray(field)),
+                descending=bool(i % 2), **common))
+        else:
+            thr = np.quantile(field, np.linspace(0.2, 0.9, sweep_k))
+            reqs.append(TopologyRequest(
+                "threshold_sweep", field=jnp.asarray(field),
+                thresholds=jnp.asarray(thr), **common))
+    return reqs

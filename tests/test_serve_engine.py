@@ -1,0 +1,241 @@
+"""Batched engine == sequential facade, bit-for-bit (DESIGN.md §Serve).
+
+The TopologyEngine may bucket, pad, batch, and cache however it likes; the
+contract is that every result is bit-identical to the sequential
+`repro.topology.submit` path on the same request — pinned here on mixed
+heterogeneous workloads drawn from the ragged seed corpus, pure in-process
+and distributed in an 8-fake-device subprocess (the dry-run rule: never set
+the device-count flag globally).  The executable cache must actually hit on
+repeated layouts: replaying a workload may not compile anything new.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from oracles import ragged_grid_case, ragged_graph_case
+
+import jax.numpy as jnp
+
+from repro.topology import TopologyRequest, submit_many
+from repro.core.ids import compute_order
+from repro.serve import TopologyEngine
+from repro.serve.bucketing import (next_pow2, bucket_shape, batch_capacity,
+                                   remap_flat_labels)
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run_worker(script, args=()):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_ROOT, "src"), os.path.dirname(__file__)])
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run([sys.executable, "-c", script] + list(args),
+                          env=env, capture_output=True, text=True,
+                          timeout=1200)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    return proc.stdout
+
+
+def _assert_results_equal(got, want):
+    assert got.query == want.query and got.tag == want.tag
+    for f in ("labels", "ascending", "descending", "segmentation"):
+        a, b = getattr(got, f), getattr(want, f)
+        assert (a is None) == (b is None), f
+        if a is not None:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f)
+
+
+def _mixed_workload():
+    """Heterogeneous pure requests: ragged grid extents (several sharing a
+    bucket), both manifold directions, an MS, a sweep, and graph CCs."""
+    reqs = []
+    for seed in (0, 1, 2, 3):
+        shape, _, conn, mask_p = ragged_grid_case(seed)
+        rng = np.random.default_rng(100 + seed)
+        reqs.append(TopologyRequest(
+            "cc", mask=jnp.asarray(rng.random(shape) < mask_p),
+            connectivity=conn, tag=f"cc{seed}"))
+        if seed < 2:
+            field = jnp.asarray(rng.standard_normal(shape))
+            reqs.append(TopologyRequest(
+                "manifold", order=compute_order(field), connectivity=conn,
+                descending=bool(seed % 2), tag=f"mf{seed}"))
+    shape, _, conn, _ = ragged_grid_case(0)
+    rng = np.random.default_rng(7)
+    field = jnp.asarray(rng.standard_normal(shape))
+    reqs.append(TopologyRequest("ms", order=compute_order(field),
+                                connectivity=conn, tag="ms"))
+    reqs.append(TopologyRequest(
+        "threshold_sweep", field=field,
+        thresholds=jnp.asarray(np.quantile(np.asarray(field),
+                                           [0.3, 0.6, 0.9])),
+        connectivity=conn, tag="sweep"))
+    n, s, r, _, _, mask = ragged_graph_case(0)
+    reqs.append(TopologyRequest("cc", domain="graph",
+                                mask=jnp.asarray(mask),
+                                senders=jnp.asarray(s),
+                                receivers=jnp.asarray(r), tag="gcc"))
+    return reqs
+
+
+def test_engine_matches_sequential_facade():
+    reqs = _mixed_workload()
+    eng = TopologyEngine(min_extent=8, max_batch=16)
+    got = eng.submit_batch(reqs)
+    want = submit_many(reqs)
+    assert len(got) == len(want) == len(reqs)
+    for g, w in zip(got, want):
+        _assert_results_equal(g, w)
+    s = eng.stats
+    assert s.requests == len(reqs)
+    # ms expands to 2 items, the 3-threshold sweep to 3
+    assert s.items == len(reqs) + 1 + 2
+    assert s.batches < s.items, "bucketing must actually batch"
+    assert 0.0 <= s.pad_fraction < 1.0
+    assert s.real_cells > 0 and s.padded_cells >= s.real_cells
+
+
+def test_replay_hits_executable_cache():
+    """Replaying the same layouts may not compile anything new: hit rate
+    >= 0.5 cumulative, and misses stay frozen after the first pass."""
+    reqs = _mixed_workload()
+    eng = TopologyEngine(min_extent=8, max_batch=16)
+    eng.submit_batch(reqs)
+    misses_after_first = eng.stats.cache_misses
+    assert misses_after_first == len(eng._exec)
+    eng.submit_batch(reqs)
+    assert eng.stats.cache_misses == misses_after_first
+    assert eng.stats.hit_rate >= 0.5
+    info = eng.cache_info()
+    assert info["hits"] == eng.stats.cache_hits
+    assert info["size"] == misses_after_first
+    assert all(v >= 1 for v in info["runs_per_executable"].values())
+
+
+def test_same_layout_requests_share_one_batch():
+    rng = np.random.default_rng(0)
+    reqs = [TopologyRequest("cc", mask=jnp.asarray(rng.random((9, 7)) < 0.6),
+                            connectivity=4, tag=i) for i in range(3)]
+    eng = TopologyEngine()
+    got = eng.submit_batch(reqs)
+    assert eng.stats.batches == 1 and eng.stats.cache_misses == 1
+    for g, w in zip(got, submit_many(reqs)):
+        _assert_results_equal(g, w)
+
+
+def test_equal_shape_graphs_share_executable():
+    """Edge lists are traced arguments: two different graphs of equal
+    (n, m) bucket separately (correctness) but reuse one executable."""
+    n1, s1, r1, _, _, m1 = ragged_graph_case(1)
+    rng = np.random.default_rng(42)
+    perm = rng.permutation(n1)
+    s2, r2 = perm[np.asarray(s1)], perm[np.asarray(r1)]
+    m2 = np.asarray(m1)[np.argsort(perm)]
+    reqs = [TopologyRequest("cc", domain="graph", mask=jnp.asarray(m1),
+                            senders=jnp.asarray(s1),
+                            receivers=jnp.asarray(r1), tag="g1"),
+            TopologyRequest("cc", domain="graph", mask=jnp.asarray(m2),
+                            senders=jnp.asarray(s2),
+                            receivers=jnp.asarray(r2), tag="g2")]
+    eng = TopologyEngine()
+    got = eng.submit_batch(reqs)
+    assert eng.stats.batches == 2, "distinct graphs must not stack payloads"
+    assert eng.stats.cache_misses == 1, "equal-shape graphs share the trace"
+    for g, w in zip(got, submit_many(reqs)):
+        _assert_results_equal(g, w)
+
+
+def test_bucketing_helpers():
+    assert [next_pow2(x) for x in (1, 2, 3, 8, 9)] == [1, 2, 4, 8, 16]
+    assert bucket_shape((9, 7, 3), min_extent=8) == (16, 8, 8)
+    assert batch_capacity(5, max_batch=64) == 8
+    assert batch_capacity(100, max_batch=64) == 64
+    # remap: unravel in padded shape, ravel in real shape; -1 preserved
+    lab = np.array([[-1, 1], [8, 9]])       # padded shape (4, 8): id 8=(1,0)
+    out = remap_flat_labels(np.pad(lab, ((0, 2), (0, 6)),
+                                   constant_values=-1), (4, 8), (2, 2))
+    np.testing.assert_array_equal(out, [[-1, 1], [2, 3]])
+
+
+# --- distributed backend: engine == facade in an 8-device subprocess ---------
+
+
+_DIST_WORKER = textwrap.dedent("""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import make_dpc_mesh
+    from repro.core.distributed_graph import GraphDecomp
+    from repro.core.ids import compute_order
+    from repro.topology import TopologyRequest, submit_many
+    from repro.serve import TopologyEngine
+
+    mesh = make_dpc_mesh((2, 2))
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i, shape in enumerate([(9, 7), (9, 7), (11, 5)]):
+        reqs.append(TopologyRequest(
+            "cc", backend="distributed", mesh=mesh, connectivity=4,
+            mask=jnp.asarray(rng.random(shape) < 0.6), tag=f"cc{i}"))
+    field = rng.standard_normal((9, 7))
+    reqs.append(TopologyRequest(
+        "ms", backend="distributed", mesh=mesh, connectivity=4,
+        order=compute_order(jnp.asarray(field)), tag="ms"))
+    reqs.append(TopologyRequest(
+        "threshold_sweep", backend="distributed", mesh=mesh, connectivity=4,
+        field=jnp.asarray(field),
+        thresholds=jnp.asarray(np.quantile(field, [0.4, 0.8])), tag="sw"))
+
+    n, s, r, nparts, part, mask = 40, None, None, 4, None, None
+    m = 90
+    a, b = rng.integers(0, n, m), rng.integers(0, n, m)
+    s, r = np.concatenate([a, b]), np.concatenate([b, a])
+    part = rng.integers(0, nparts, n)
+    dec = GraphDecomp(n, s, r, nparts, part=part)
+    gmesh = make_dpc_mesh(nparts)
+    mask = rng.random(n) < 0.7
+    reqs.append(TopologyRequest(
+        "cc", domain="graph", backend="distributed", mesh=gmesh, decomp=dec,
+        mask=jnp.asarray(mask), senders=jnp.asarray(s),
+        receivers=jnp.asarray(r), tag="gcc"))
+
+    eng = TopologyEngine(min_extent=8, max_batch=8)
+    got = eng.submit_batch(reqs)
+    want = submit_many(reqs)
+    for g, w in zip(got, want):
+        assert g.tag == w.tag
+        for f in ("labels", "ascending", "descending", "segmentation"):
+            a_, b_ = getattr(g, f), getattr(w, f)
+            assert (a_ is None) == (b_ is None), (g.tag, f)
+            if a_ is not None:
+                np.testing.assert_array_equal(np.asarray(a_),
+                                              np.asarray(b_),
+                                              err_msg=f"{g.tag}:{f}")
+    # the paper's one-phase contract survives batching, per tenant
+    # (sweep stats are per-threshold lists, ms stats nest per direction)
+    for g in got:
+        if not g.stats:
+            continue
+        v = g.stats.get("comm_phases",
+                        g.stats.get("descending", {}).get("comm_phases"))
+        ph = v if isinstance(v, list) else [v]
+        assert all(x == 1 for x in ph), (g.tag, v)
+    # the three same-bucket CC masks plus the two sweep masks batch into
+    # fewer executions than items
+    assert eng.stats.batches < eng.stats.items
+    misses = eng.stats.cache_misses
+    # replaying the workload compiles nothing new — all executions hit
+    eng.submit_batch(reqs)
+    assert eng.stats.cache_misses == misses
+    assert eng.stats.cache_hits >= misses
+    print("DIST_ENGINE_OK", eng.stats.batches, eng.stats.items)
+""")
+
+
+def test_engine_distributed_matches_facade():
+    out = _run_worker(_DIST_WORKER)
+    assert "DIST_ENGINE_OK" in out

@@ -1,0 +1,194 @@
+"""Facade parity contract (DESIGN.md §Serve): every `repro.topology.submit`
+route must be bit-identical to the legacy entry point it fronts, on the
+same ragged seed corpus the pad-and-mask harness uses; the legacy names in
+`repro.core` must still work but emit DeprecationWarning; and the two stats
+tuples must stay field-for-field reconciled.
+
+Distributed routes are covered in-subprocess by tests/test_serve_engine.py
+(same 8-fake-device worker pattern); here the pure routes run in-process.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from oracles import (GRID_SEED_CORPUS, GRAPH_SEED_CORPUS,
+                     ragged_grid_case, ragged_graph_case)
+
+import jax.numpy as jnp
+
+from repro.topology import TopologyRequest, submit, submit_many
+from repro.core.connected_components import (connected_components_grid,
+                                             connected_components_graph)
+from repro.core.ms_segmentation import (ms_segmentation,
+                                        ms_segmentation_graph,
+                                        descending_manifold,
+                                        ascending_manifold)
+from repro.core.ids import compute_order
+
+
+def _grid_case(seed):
+    shape, _, conn, mask_p = ragged_grid_case(seed)
+    rng = np.random.default_rng(1000 + seed)
+    mask = rng.random(shape) < mask_p
+    field = rng.standard_normal(shape)
+    return shape, conn, jnp.asarray(mask), jnp.asarray(field)
+
+
+# --- pure-route parity on the ragged corpus ----------------------------------
+
+
+@pytest.mark.parametrize("seed", GRID_SEED_CORPUS)
+def test_cc_grid_pure_parity(seed):
+    _, conn, mask, _ = _grid_case(seed)
+    legacy = connected_components_grid(mask, conn)
+    res = submit(TopologyRequest("cc", mask=mask, connectivity=conn))
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(legacy.labels))
+    assert res.meta["n_rounds"] == legacy.n_rounds
+
+
+@pytest.mark.parametrize("seed", GRAPH_SEED_CORPUS)
+def test_cc_graph_pure_parity(seed):
+    _, s, r, _, _, mask = ragged_graph_case(seed)
+    m, s, r = jnp.asarray(mask), jnp.asarray(s), jnp.asarray(r)
+    legacy = connected_components_graph(m, s, r)
+    res = submit(TopologyRequest("cc", domain="graph", mask=m,
+                                 senders=s, receivers=r))
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(legacy.labels))
+
+
+@pytest.mark.parametrize("seed", GRID_SEED_CORPUS[:4])
+def test_ms_and_manifold_grid_pure_parity(seed):
+    _, conn, _, field = _grid_case(seed)
+    order = compute_order(field)
+    legacy = ms_segmentation(order, conn)
+    res = submit(TopologyRequest("ms", order=order, connectivity=conn))
+    np.testing.assert_array_equal(np.asarray(res.segmentation),
+                                  np.asarray(legacy.segmentation))
+    np.testing.assert_array_equal(np.asarray(res.ascending),
+                                  np.asarray(legacy.ascending))
+
+    for descending, fn in ((True, descending_manifold),
+                           (False, ascending_manifold)):
+        lab, _ = fn(order, conn)
+        got = submit(TopologyRequest("manifold", order=order,
+                                     connectivity=conn,
+                                     descending=descending))
+        np.testing.assert_array_equal(np.asarray(got.labels).ravel(),
+                                      np.asarray(lab).ravel())
+
+
+@pytest.mark.parametrize("seed", GRAPH_SEED_CORPUS[:4])
+def test_ms_graph_pure_parity(seed):
+    n, s, r, _, _, _ = ragged_graph_case(seed)
+    rng = np.random.default_rng(2000 + seed)
+    order = compute_order(jnp.asarray(rng.standard_normal(n)))
+    legacy = ms_segmentation_graph(order, jnp.asarray(s), jnp.asarray(r))
+    res = submit(TopologyRequest("ms", domain="graph", order=order,
+                                 senders=jnp.asarray(s),
+                                 receivers=jnp.asarray(r)))
+    np.testing.assert_array_equal(np.asarray(res.segmentation),
+                                  np.asarray(legacy.segmentation))
+
+
+@pytest.mark.parametrize("seed", GRID_SEED_CORPUS[:4])
+def test_threshold_sweep_pure_is_sequential_ccs(seed):
+    """The vmapped sweep == K independent legacy CC calls, grid and graph."""
+    _, conn, _, field = _grid_case(seed)
+    thr = np.quantile(np.asarray(field), [0.25, 0.5, 0.75])
+    res = submit(TopologyRequest("threshold_sweep", field=field,
+                                 thresholds=jnp.asarray(thr),
+                                 connectivity=conn))
+    assert res.labels.shape == (3,) + field.shape
+    for k, t in enumerate(thr):
+        legacy = connected_components_grid(field > t, conn)
+        np.testing.assert_array_equal(np.asarray(res.labels[k]),
+                                      np.asarray(legacy.labels))
+
+    n, s, r, _, _, _ = ragged_graph_case(seed)
+    rng = np.random.default_rng(3000 + seed)
+    gfield = jnp.asarray(rng.standard_normal(n))
+    gthr = np.quantile(np.asarray(gfield), [0.3, 0.7])
+    res = submit(TopologyRequest("threshold_sweep", domain="graph",
+                                 field=gfield, thresholds=jnp.asarray(gthr),
+                                 senders=jnp.asarray(s),
+                                 receivers=jnp.asarray(r)))
+    for k, t in enumerate(gthr):
+        legacy = connected_components_graph(gfield > t, jnp.asarray(s),
+                                            jnp.asarray(r))
+        np.testing.assert_array_equal(np.asarray(res.labels[k]),
+                                      np.asarray(legacy.labels))
+
+
+def test_submit_many_keeps_order_and_tags():
+    _, conn, mask, field = _grid_case(0)
+    reqs = [TopologyRequest("cc", mask=mask, connectivity=conn, tag="a"),
+            TopologyRequest("ms", order=compute_order(field),
+                            connectivity=conn, tag="b")]
+    out = submit_many(reqs)
+    assert [r.tag for r in out] == ["a", "b"]
+    assert [r.query for r in out] == ["cc", "ms"]
+
+
+# --- request validation ------------------------------------------------------
+
+
+def test_request_validation_errors():
+    with pytest.raises(ValueError, match="query"):
+        submit(TopologyRequest("nope", mask=jnp.zeros((2, 2), bool)))
+    with pytest.raises(ValueError, match="needs mask"):
+        submit(TopologyRequest("cc"))
+    with pytest.raises(ValueError, match="senders"):
+        submit(TopologyRequest("cc", domain="graph",
+                               mask=jnp.zeros(4, bool)))
+    with pytest.raises(ValueError, match="mesh"):
+        submit(TopologyRequest("cc", backend="distributed",
+                               mask=jnp.zeros((2, 2), bool)))
+    with pytest.raises(NotImplementedError):
+        submit(TopologyRequest("manifold", domain="graph",
+                               order=jnp.arange(4),
+                               senders=jnp.array([0]),
+                               receivers=jnp.array([1])))
+
+
+# --- legacy names: working deprecation shims ---------------------------------
+
+
+def test_legacy_core_names_warn_and_forward():
+    import repro.core as core
+    mask = jnp.asarray(np.eye(5, dtype=bool))
+    with pytest.warns(DeprecationWarning, match="repro.topology"):
+        legacy = core.connected_components_grid(mask, 4)
+    res = submit(TopologyRequest("cc", mask=mask, connectivity=4))
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(legacy.labels))
+
+
+def test_facade_path_does_not_warn():
+    """Internal modules import submodules directly, so the facade and the
+    engine never trip their own deprecation layer."""
+    mask = jnp.asarray(np.eye(5, dtype=bool))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        submit(TopologyRequest("cc", mask=mask, connectivity=4))
+
+
+# --- stats reconciliation ----------------------------------------------------
+
+
+def test_stats_tuples_reconciled():
+    from repro.core.stats import (STAT_FIELDS, DPCStats, GraphDPCStats,
+                                  stats_as_dict)
+    assert DPCStats._fields == STAT_FIELDS
+    assert GraphDPCStats._fields == STAT_FIELDS
+    vals = {f: jnp.asarray(i) for i, f in enumerate(STAT_FIELDS)}
+    for cls in (DPCStats, GraphDPCStats):
+        d = cls(**vals).as_dict()
+        assert tuple(d) == STAT_FIELDS
+        assert d["comm_phases"] == STAT_FIELDS.index("comm_phases")
+    batched = DPCStats(**{f: jnp.full((3,), i)
+                          for i, f in enumerate(STAT_FIELDS)})
+    d = stats_as_dict(batched)
+    assert d["stitch_rounds"] == [STAT_FIELDS.index("stitch_rounds")] * 3
