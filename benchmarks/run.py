@@ -38,7 +38,12 @@ def timeit(fn, *args, reps: int = 3):
     return (time.perf_counter() - t0) / reps * 1e6, out
 
 
+_ROWS = []  # every _emit row; main() dumps the kernel/alg subset as JSON
+
+
 def _emit(name, us, derived=""):
+    _ROWS.append({"name": name, "us_per_call": round(us),
+                  "derived": derived})
     print(f"{name},{us:.0f},{derived}", flush=True)
 
 
@@ -134,6 +139,40 @@ def alg_doubling_vs_wave(edge: int = 512):
     _emit(f"alg_wave_propagation_snake_{edge}", us_lp,
           f"rounds={int(base.n_rounds)}")
 
+    # 3-D snake through the distributed hot path: the fused kernel saturates
+    # each x-slab in VMEM, so the global doubling loop starts near-converged
+    # — DPCStats.kernel_rounds certifies the rounds moved off the global
+    # loop (DESIGN.md §Perf).  mesh(1) keeps the bench single-device; the
+    # kernel runs in interpret mode on CPU.
+    from repro.core.distributed import (make_dpc_mesh,
+                                        distributed_connected_components)
+    snake = np.zeros((edge, 32, 2), bool)
+    snake[:, ::2, 0] = True
+    for i in range(0, 32 - 2, 4):                      # serpentine in z=0
+        snake[-1, i:i + 2, 0] = True
+        snake[0, i + 2:i + 4, 0] = True
+    m3 = jnp.asarray(snake)
+    mesh = make_dpc_mesh(1)
+    us_ref, (l_ref, s_ref) = timeit(
+        lambda x: distributed_connected_components(x, mesh, 6,
+                                                   fused_impl="ref"),
+        m3, reps=1)
+    us_fus, (l_fus, s_fus) = timeit(
+        lambda x: distributed_connected_components(x, mesh, 6,
+                                                   fused_impl="kernel"),
+        m3, reps=1)
+    assert (np.asarray(l_ref) == np.asarray(l_fus)).all()
+    kr, li_f = int(s_fus.kernel_rounds), int(s_fus.local_iters)
+    li_r = int(s_ref.local_iters)
+    assert kr >= 1 and li_f < li_r, (
+        f"fused local phase must strictly reduce global doubling rounds: "
+        f"kernel_rounds={kr}, local_iters {li_r} -> {li_f}")
+    _emit(f"alg_unfused_local_phase_snake3d_{edge}", us_ref,
+          f"local_iters={li_r};kernel_rounds=0")
+    _emit(f"alg_fused_local_phase_snake3d_{edge}", us_fus,
+          f"local_iters={li_f};kernel_rounds={kr};"
+          f"saved={int(s_fus.global_iters_saved)}")
+
 
 def kernels():
     from repro.kernels.steepest_neighbor import steepest_neighbor
@@ -149,6 +188,24 @@ def kernels():
         o, neighbor_offsets(3, 6)), order, reps=2)
     _emit("kernel_steepest_pallas_interp_64", us_k, "interpret=True")
     _emit("kernel_steepest_ref_64", us_r, "jnp oracle")
+
+    # fused init + in-tile saturation vs the bit-exact host oracle (the
+    # parity assert keeps the bench honest: pointers AND rounds must match)
+    from repro.kernels.fused_local_phase import fused_local_phase
+    order32 = jnp.asarray(rng.permutation(32 * 32 * 32)
+                          .reshape(32, 32, 32).astype(np.int32))
+    us_fk, (fp, fr) = timeit(
+        lambda o: fused_local_phase(o, 6, mode="manifold", block_x=8,
+                                    interpret=True), order32, reps=1)
+    want, wr = ref.fused_local_phase_ref(order32, 6, mode="manifold",
+                                         block_x=8)
+    assert (np.asarray(fp) == np.asarray(want)).all()
+    assert int(fr) == int(wr) >= 1
+    us_fr, _ = timeit(lambda o: ref.fused_local_phase_ref(
+        o, 6, mode="manifold", block_x=8), order32, reps=1)
+    _emit("kernel_fused_local_phase_pallas_interp_32", us_fk,
+          f"interpret=True;rounds={int(fr)}")
+    _emit("kernel_fused_local_phase_ref_32", us_fr, "host oracle")
 
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(k1, (1, 4, 256, 64))
@@ -284,6 +341,20 @@ def main(argv=None) -> None:
         if size is not None and n in _SIZED:
             kw[_SIZED[n]] = size
         fn(**kw)
+    # kernel-facing rows also land in a JSON artifact (BENCH_kernels.json):
+    # the fused-vs-unfused round counts are the acceptance numbers of the
+    # fused-local-phase kernel, and JSON keeps them machine-comparable
+    # across nightly runs without parsing the CSV
+    kernel_rows = [r for r in _ROWS
+                   if r["name"].startswith(("kernel_", "alg_"))]
+    if kernel_rows:
+        import json
+        out = os.path.join(os.getcwd(), "BENCH_kernels.json")
+        with open(out, "w") as f:
+            json.dump({"rows": kernel_rows}, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {out} ({len(kernel_rows)} kernel rows)",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -22,8 +22,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from .pathcompress import path_compress, jump
-from .steepest import (grid_mask_argmax, graph_mask_argmax, neighbor_offsets,
-                       shift_fill)
+from .steepest import graph_mask_argmax, neighbor_offsets, shift_fill
 
 
 class CCResult(NamedTuple):
@@ -77,20 +76,25 @@ def _cc_fixpoint(d0: jax.Array, stitch_fn, max_rounds: int = 64) -> CCResult:
     return CCResult(d, rounds, its)
 
 
-@partial(jax.jit, static_argnames=("connectivity",))
-def connected_components_grid(mask: jax.Array, connectivity: int = 6
-                              ) -> CCResult:
+@partial(jax.jit, static_argnames=("connectivity", "fused_impl"))
+def connected_components_grid(mask: jax.Array, connectivity: int = 6,
+                              fused_impl: str = "auto") -> CCResult:
     """Mask-implicit connected components on a structured grid.
 
     The mask plays the paper's feature-mask role (e.g. thresholded scalar
     field); the grid is never extracted — non-feature vertices just carry -1
-    (the paper's "implicitly thresholded grids", §5).
+    (the paper's "implicitly thresholded grids", §5).  fused_impl selects
+    the pointer-init implementation (repro.kernels.ops.fused_local_phase);
+    labels are bit-identical across choices — the kernel path merely starts
+    the first compression near-converged.
     """
+    # lazy: repro.kernels imports repro.core.steepest at module load
+    from repro.kernels.ops import fused_local_phase
     n = mask.size
     mask_flat = mask.ravel().astype(bool)
-    d0 = grid_mask_argmax(mask, connectivity)
+    d0, _ = fused_local_phase(mask, connectivity, mode="cc", impl=fused_impl)
     stitch = lambda d: _grid_stitch(d, mask_flat, mask.shape, connectivity, n)
-    res = _cc_fixpoint(d0, stitch)
+    res = _cc_fixpoint(d0.ravel(), stitch)
     return CCResult(res.labels.reshape(mask.shape), res.n_rounds,
                     res.n_compress_iter)
 

@@ -63,8 +63,7 @@ from ._shardmap import shard_map_norep
 from ._table import (pointer_chase, make_group_max, hook_propagate,
                      value_substitute)
 from .stats import DPCStats
-from .steepest import (grid_steepest, grid_mask_argmax, neighbor_offsets,
-                       shift_fill)
+from .steepest import neighbor_offsets, shift_fill
 from .pathcompress import path_compress
 
 AXIS = "shards"                 # legacy 1-D axis name (make_flat_mesh interop)
@@ -350,22 +349,30 @@ def _table_compress(T, dec: BlockDecomp, max_iter=64):
 # --- MS manifolds ------------------------------------------------------------
 
 
-def _manifold_block(order_blk, *, dec: BlockDecomp, connectivity):
+def _manifold_block(order_blk, *, dec: BlockDecomp, connectivity,
+                    fused_impl: str = "auto"):
     """Always runs the *descending* direction; the ascending manifold is
     obtained by flipping the order field outside (keeps the -1 halo fill
     strictly below every candidate)."""
+    # lazy: repro.kernels imports repro.core.steepest at module load
+    from repro.kernels.ops import fused_local_phase
+
     # 1. order halo (fill -1: below every real order value, never steepest)
     ext = order_blk
     for a in range(dec.k):
         ext = _halo_extend(ext, a, dec.names[a], dec.layout[a], -1)
 
-    # 2. steepest init in local ids; ghosts pretend to be maxima
-    ptr = grid_steepest(ext, connectivity, descending=True)
-    ghost = jnp.asarray(dec.ghost_mask().ravel())
-    lids = jnp.arange(ext.size, dtype=jnp.int32)
-    d = jnp.where(ghost, lids, ptr)
+    # 2.+3a. fused steepest init + in-tile saturation in local ids, ghosts
+    #    pretending to be maxima (Alg. 1 lines 6-8); on the jnp fallback this
+    #    is exactly the unfused init (kernel_rounds == 0)
+    d, kernel_rounds = fused_local_phase(
+        ext, connectivity, mode="manifold",
+        self_mask=jnp.asarray(dec.ghost_mask()), impl=fused_impl)
+    d = d.ravel()
 
-    # 3. local compression (Alg. 1 lines 9-19)
+    # 3. local compression to the block fixpoint (Alg. 1 lines 9-19; with
+    #    the kernel path it starts near-converged — only chains crossing
+    #    tile boundaries remain)
     d, local_iters = path_compress(d)
 
     # 4. to global ids + the single communication phase (Alg. 2); pad cells
@@ -385,32 +392,41 @@ def _manifold_block(order_blk, *, dec: BlockDecomp, connectivity):
     final = jnp.where((o >= 0) & is_b,
                       T[jnp.clip(pos, 0, T.size - 1)], o)
 
+    li = lax.pmax(local_iters, dec.names)
+    kr = lax.pmax(kernel_rounds, dec.names)
     stats = DPCStats(
-        local_iters=lax.pmax(local_iters, dec.names),
+        local_iters=li,
         table_iters=table_iters,  # identical on all devices (same table)
         stitch_rounds=jnp.int32(0),
         ghost_bytes=jnp.float32(dec.n_valid_slots * T.dtype.itemsize),
         masked_ghost_fraction=jnp.float32(1.0),
         pad_fraction=jnp.float32(dec.pad_fraction),
         comm_phases=jnp.int32(1),
+        kernel_rounds=kr,
+        # the unfused local loop needs >= kr rounds to resolve the same
+        # in-tile chains, the fused one used li — a provable lower bound
+        global_iters_saved=jnp.maximum(kr - li, 0),
     )
     return final.reshape(order_blk.shape), stats
 
 
 def distributed_manifold(order, mesh: Mesh, connectivity: int = 6,
-                         descending: bool = True):
+                         descending: bool = True, fused_impl: str = "auto"):
     """Descending (or ascending) manifold of a block-sharded order field.
 
     order: int array of ANY extent (mesh axis a decomposes grid axis a;
     non-divisible extents are padded with inert sentinels, deviation (p) in
     DESIGN.md).  Returns the label grid (same extent as `order`) and
-    replicated DPCStats.
+    replicated DPCStats.  fused_impl selects the block-local phase
+    implementation (repro.kernels.ops.fused_local_phase); labels are
+    bit-identical across choices.
     """
     dec = _decomp_for(mesh, order.shape)
     if not descending:
         order = order.size - 1 - order  # ascending = descending on flipped order
     order = _pad_input(order, dec, -1)  # -1: below every real order value
-    fn = partial(_manifold_block, dec=dec, connectivity=connectivity)
+    fn = partial(_manifold_block, dec=dec, connectivity=connectivity,
+                 fused_impl=fused_impl)
     spec = P(*dec.names, *([None] * (order.ndim - dec.k)))
     mapped = shard_map_norep(fn, mesh, (spec,),
                              (spec, DPCStats(*([P()] * _N_STATS))))
@@ -451,7 +467,9 @@ def _cc_local_fixpoint(d, mask_ext, connectivity, max_rounds=64):
 
     d, _, rounds, its = lax.while_loop(
         cond, body, (d, jnp.asarray(True), jnp.int32(0), it0))
-    return d, rounds, its
+    # it0 separately: the fused kernel pre-saturates exactly this first
+    # compression, so the round-saving bound compares kernel_rounds to it0
+    return d, rounds, its, it0
 
 
 def _table_propagate(Tstar, Mflat, dec: BlockDecomp, connectivity,
@@ -494,23 +512,28 @@ def _table_propagate(Tstar, Mflat, dec: BlockDecomp, connectivity,
 
 
 def _cc_block(mask_blk, *, dec: BlockDecomp, connectivity,
-              gather_mask: bool = True):
+              gather_mask: bool = True, fused_impl: str = "auto"):
     """gather_mask=False is the §Perf variant: the boundary mask is exactly
     (T >= 0) — labels are -1 where unmasked — so the mask all-gather is
     redundant and dropped (less exchange traffic, bit-identical)."""
+    # lazy: repro.kernels imports repro.core.steepest at module load
+    from repro.kernels.ops import fused_local_phase
+
     # 1. mask halo (fill False: domain boundary is never masked)
     ext = mask_blk
     for a in range(dec.k):
         ext = _halo_extend(ext, a, dec.names[a], dec.layout[a], False)
 
-    # 2. init: largest masked neighbor id; masked ghosts pretend self
-    d0 = grid_mask_argmax(ext, connectivity)
-    ghost = jnp.asarray(dec.ghost_mask().ravel())
-    lids = jnp.arange(ext.size, dtype=d0.dtype)
-    d = jnp.where(ghost & ext.ravel(), lids, d0)
+    # 2.(+first compress) fused init: largest masked neighbor id, masked
+    #    ghosts pretending self, saturated in-tile by the kernel path
+    d, kernel_rounds = fused_local_phase(
+        ext, connectivity, mode="cc",
+        self_mask=jnp.asarray(dec.ghost_mask()), impl=fused_impl)
+    d = d.ravel()
 
     # 3. local CC fixpoint (stitch + compress, Alg. 3)
-    d, stitch_rounds, local_iters = _cc_local_fixpoint(d, ext, connectivity)
+    d, stitch_rounds, local_iters, it0 = _cc_local_fixpoint(
+        d, ext, connectivity)
 
     # 4. to global ids + the single communication phase: labels (+ masks)
     gid = _gid_map(dec).ravel()
@@ -539,6 +562,8 @@ def _cc_block(mask_blk, *, dec: BlockDecomp, connectivity,
 
     # pad table slots are label -1 / mask False by construction (the input
     # mask is padded False, deviation (p)), so they are excluded here
+    kr = lax.pmax(kernel_rounds, dec.names)
+    i0 = lax.pmax(it0, dec.names)
     stats = DPCStats(
         local_iters=lax.pmax(local_iters, dec.names),
         table_iters=table_iters + prop_iters,
@@ -549,22 +574,28 @@ def _cc_block(mask_blk, *, dec: BlockDecomp, connectivity,
         / jnp.float32(max(dec.n_valid_slots, 1)),
         pad_fraction=jnp.float32(dec.pad_fraction),
         comm_phases=jnp.int32(1),
+        kernel_rounds=kr,
+        # the kernel pre-saturates the FIRST compression only; the unfused
+        # first compression needs >= kr rounds, the fused one used i0
+        global_iters_saved=jnp.maximum(kr - i0, 0),
     )
     return final.reshape(mask_blk.shape), stats
 
 
 def distributed_connected_components(mask, mesh: Mesh, connectivity: int = 6,
-                                     gather_mask: bool = True):
+                                     gather_mask: bool = True,
+                                     fused_impl: str = "auto"):
     """Mask-implicit connected components of a block-sharded grid (Alg. 3 +
     Alg. 2).  Any grid extent works: non-divisible extents are padded with
     mask=False sentinels, which are inert in every phase (deviation (p) in
     DESIGN.md).  Returns (labels, DPCStats); labels carry the largest vertex
     id of the component, -1 where unmasked.  gather_mask=False drops the
-    redundant mask exchange (§Perf)."""
+    redundant mask exchange (§Perf); fused_impl selects the block-local
+    phase implementation (bit-identical labels across choices)."""
     dec = _decomp_for(mesh, mask.shape)
     mask = _pad_input(mask, dec, False)  # padding is never masked
     fn = partial(_cc_block, dec=dec, connectivity=connectivity,
-                 gather_mask=gather_mask)
+                 gather_mask=gather_mask, fused_impl=fused_impl)
     spec = P(*dec.names, *([None] * (mask.ndim - dec.k)))
     mapped = shard_map_norep(fn, mesh, (spec,),
                              (spec, DPCStats(*([P()] * _N_STATS))))
@@ -601,7 +632,8 @@ def _batched_block_call(fn, mesh, dec: BlockDecomp, x):
 
 
 def distributed_manifold_batch(orders, mesh: Mesh, connectivity: int = 6,
-                               descending: bool = True):
+                               descending: bool = True,
+                               fused_impl: str = "auto"):
     """Batched `distributed_manifold`: orders is a (B, *grid) stack of order
     fields sharing one extent; returns ((B, *grid) labels, DPCStats with a
     leading (B,) dim).  Per item bit-identical to the single-request call."""
@@ -609,13 +641,15 @@ def distributed_manifold_batch(orders, mesh: Mesh, connectivity: int = 6,
     if not descending:
         orders = dec.size - 1 - orders  # ascending = descending on flipped
     orders = _pad_input_batch(orders, dec, -1)
-    fn = partial(_manifold_block, dec=dec, connectivity=connectivity)
+    fn = partial(_manifold_block, dec=dec, connectivity=connectivity,
+                 fused_impl=fused_impl)
     return _batched_block_call(fn, mesh, dec, orders)
 
 
 def distributed_connected_components_batch(masks, mesh: Mesh,
                                            connectivity: int = 6,
-                                           gather_mask: bool = True):
+                                           gather_mask: bool = True,
+                                           fused_impl: str = "auto"):
     """Batched `distributed_connected_components`: masks is a (B, *grid)
     stack of feature masks sharing one extent; returns ((B, *grid) labels,
     DPCStats with a leading (B,) dim).  Per item bit-identical to the
@@ -623,5 +657,5 @@ def distributed_connected_components_batch(masks, mesh: Mesh,
     dec = _decomp_for(mesh, masks.shape[1:])
     masks = _pad_input_batch(masks, dec, False)
     fn = partial(_cc_block, dec=dec, connectivity=connectivity,
-                 gather_mask=gather_mask)
+                 gather_mask=gather_mask, fused_impl=fused_impl)
     return _batched_block_call(fn, mesh, dec, masks)

@@ -320,6 +320,8 @@ def _cc_partition(local_mask, lgid, local_ghost, owned_lidx, es, er,
         masked_ghost_fraction=masked_frac,
         comm_phases=jnp.int32(n_gather),
         pad_fraction=jnp.float32(dec.pad_fraction),
+        kernel_rounds=jnp.int32(0),        # no fused grid kernel on graphs
+        global_iters_saved=jnp.int32(0),
     )
     return final[None], stats
 

@@ -24,14 +24,29 @@ class MSSegmentation(NamedTuple):
     n_iter_desc: jax.Array
 
 
-def descending_manifold(order: jax.Array, connectivity: int = 6):
-    d0 = grid_steepest(order, connectivity, descending=True)
-    return path_compress(d0)
+def _fused_init(order, connectivity, fused_impl):
+    """Block-local phase through the kernels dispatch (lazy import:
+    repro.kernels imports repro.core.steepest at module load).  Returns the
+    (possibly pre-saturated) pointer init; the path_compress fixpoint is
+    bit-identical to the plain grid_steepest init."""
+    from repro.kernels.ops import fused_local_phase
+    d0, _ = fused_local_phase(order, connectivity, mode="manifold",
+                              impl=fused_impl)
+    return d0.ravel()
 
 
-def ascending_manifold(order: jax.Array, connectivity: int = 6):
-    d0 = grid_steepest(order, connectivity, descending=False)
-    return path_compress(d0)
+def descending_manifold(order: jax.Array, connectivity: int = 6,
+                        fused_impl: str = "auto"):
+    return path_compress(_fused_init(order, connectivity, fused_impl))
+
+
+def ascending_manifold(order: jax.Array, connectivity: int = 6,
+                       fused_impl: str = "auto"):
+    # ascending = descending on the flipped order field (the kernel argmax
+    # of size-1-order targets exactly grid_steepest's descending=False
+    # choice: a monotone transform with unique values preserves the argmax)
+    return path_compress(_fused_init(order.size - 1 - order, connectivity,
+                                     fused_impl))
 
 
 def _pair_hash(desc, asc, n):
@@ -41,9 +56,10 @@ def _pair_hash(desc, asc, n):
     return desc.astype(dt) * n + asc.astype(dt)
 
 
-def ms_segmentation(order: jax.Array, connectivity: int = 6) -> MSSegmentation:
-    desc, it_d = descending_manifold(order, connectivity)
-    asc, it_a = ascending_manifold(order, connectivity)
+def ms_segmentation(order: jax.Array, connectivity: int = 6,
+                    fused_impl: str = "auto") -> MSSegmentation:
+    desc, it_d = descending_manifold(order, connectivity, fused_impl)
+    asc, it_a = ascending_manifold(order, connectivity, fused_impl)
     seg = _pair_hash(desc, asc, order.size)
     return MSSegmentation(asc.reshape(order.shape), desc.reshape(order.shape),
                           seg.reshape(order.shape), it_a, it_d)

@@ -24,7 +24,8 @@ import jax
 
 # the shared field prefix, in the canonical order both classes use
 STAT_FIELDS = ("local_iters", "table_iters", "stitch_rounds", "ghost_bytes",
-               "masked_ghost_fraction", "pad_fraction", "comm_phases")
+               "masked_ghost_fraction", "pad_fraction", "comm_phases",
+               "kernel_rounds", "global_iters_saved")
 
 
 def stats_as_dict(stats) -> dict:
@@ -51,6 +52,13 @@ class DPCStats(NamedTuple):
     comm_phases: jax.Array      # bulk exchange phases traced (paper budget:
                                 # 1; the halo ppermute is ghost setup, not a
                                 # gather phase)
+    kernel_rounds: jax.Array    # max in-tile saturation rounds of the fused
+                                # local-phase kernel (0 on the jnp fallback)
+    global_iters_saved: jax.Array  # provable lower bound on doubling rounds
+                                   # the fusion removed from the global loop:
+                                   # max(kernel_rounds - local_iters, 0) —
+                                   # the unfused loop needs >= kernel_rounds
+                                   # rounds to resolve the same chains
 
     def as_dict(self) -> dict:
         return stats_as_dict(self)
@@ -68,6 +76,9 @@ class GraphDPCStats(NamedTuple):
     pad_fraction: jax.Array     # fraction of owned slots that are padding
                                 # (0 for a balanced partition)
     comm_phases: jax.Array      # all_gather phases traced (paper budget: 1)
+    kernel_rounds: jax.Array    # always 0: the fused grid kernel does not
+                                # apply to unstructured partitions
+    global_iters_saved: jax.Array  # always 0 (see kernel_rounds)
 
     def as_dict(self) -> dict:
         return stats_as_dict(self)

@@ -31,6 +31,12 @@ _OFF_3D_14 = _OFF_3D_6 + [
     (1, 1, 0), (-1, -1, 0), (0, 1, 1), (0, -1, -1),
     (1, 0, 1), (-1, 0, -1), (1, 1, 1), (-1, -1, -1),
 ]
+# full digital-topology neighborhoods: 26 = every nonzero {-1,0,1}^3 offset,
+# 18 = the subset sharing a face or an edge (no corner diagonals)
+_OFF_3D_26 = [(i, j, k)
+              for i in (-1, 0, 1) for j in (-1, 0, 1) for k in (-1, 0, 1)
+              if (i, j, k) != (0, 0, 0)]
+_OFF_3D_18 = [off for off in _OFF_3D_26 if sum(abs(o) for o in off) <= 2]
 
 
 def neighbor_offsets(ndim: int, connectivity: int):
@@ -40,6 +46,8 @@ def neighbor_offsets(ndim: int, connectivity: int):
         (2, 6): _OFF_2D_6,
         (3, 6): _OFF_3D_6,
         (3, 14): _OFF_3D_14,
+        (3, 18): _OFF_3D_18,
+        (3, 26): _OFF_3D_26,
     }
     key = (ndim, connectivity)
     if key not in table:

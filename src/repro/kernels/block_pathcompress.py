@@ -36,17 +36,19 @@ def _kernel(d_ref, out_ref, *, rounds, block):
     out_ref[...] = d
 
 
+def _next_pow2(n: int) -> int:
+    """Engine bucket capacity (serve.bucketing.next_pow2, re-derived here to
+    keep kernels import-independent of the serving layer)."""
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
 @functools.partial(jax.jit,
                    static_argnames=("rounds", "block", "interpret"))
-def block_pathcompress(d: jax.Array, rounds: int = 4, block: int = 4096,
-                       interpret: bool = True) -> jax.Array:
-    """K pointer-doubling rounds confined to `block`-sized tiles.
-
-    d: (N,) int32 global pointers (any N; a ragged last tile is padded with
-    the -1 sentinel and sliced back off).
-    """
+def _padded_call(d: jax.Array, rounds: int, block: int,
+                 interpret: bool) -> jax.Array:
+    """The jitted pallas program over an already-bucketed length: its cache
+    keys on (capacity, block, rounds, dtype) only."""
     n = d.shape[0]
-    block = min(block, n)
     n_tiles = -(-n // block)          # ceil: the last tile may be ragged
     n_pad = n_tiles * block
     if n_pad != n:
@@ -61,3 +63,24 @@ def block_pathcompress(d: jax.Array, rounds: int = 4, block: int = 4096,
         interpret=interpret,
     )(d)
     return out[:n] if n_pad != n else out
+
+
+def block_pathcompress(d: jax.Array, rounds: int = 4, block: int = 4096,
+                       interpret: bool = True) -> jax.Array:
+    """K pointer-doubling rounds confined to `block`-sized tiles.
+
+    d: (N,) int32 global pointers (any N; ragged tiles are padded with the
+    -1 sentinel and sliced back off).  The length is snapped to the serving
+    engine's power-of-two bucket capacities OUTSIDE the jit boundary —
+    `min(block, n)` used to bake the raw request length into the traced
+    shape, so every distinct length compiled a fresh executable; now any n
+    in (cap/2, cap] reuses one per-(capacity, block, dtype) executable, at
+    the cost of at most one extra tile's worth of inert -1 work.
+    """
+    n = d.shape[0]
+    cap = _next_pow2(n)
+    block = min(block, cap)
+    if cap != n:
+        d = jnp.pad(d, (0, cap - n), constant_values=-1)
+    out = _padded_call(d, rounds, block, interpret)
+    return out[:n] if cap != n else out

@@ -1,0 +1,224 @@
+"""Pallas TPU kernel: fused block-local phase (init + in-VMEM saturation).
+
+The block-local phase of Alg. 1/3 is DPC's hot path, and running it as
+`grid_steepest` followed by a global `d <- d[d]` while-loop costs one full
+HBM round-trip per doubling round, with the extended block materialised
+between init and first compression.  This kernel fuses both: per
+VMEM-resident x-slab it
+
+  1. computes the pointer init directly from the order field (steepest
+     argmax, ``mode="manifold"``) or the feature mask (largest masked
+     neighbor id, ``mode="cc"``), reusing the pre-sliced halo-plane layout
+     of `steepest_neighbor` (no overlapping BlockSpecs);
+  2. applies the optional ``self_mask`` override in-register (distributed
+     ghost vertices pretend to be maxima, Alg. 1 lines 6-8);
+  3. runs the pointer-doubling saturation loop *inside the tile* until the
+     tile is locally converged (the on-device saturation-loop idiom of the
+     GPU Morse-Smale pipeline, arXiv 2009.03707).
+
+Out-of-tile and sentinel (-1) pointers are fixed points, so the tile
+boundary is a ghost boundary and correctness follows from the distributed
+algorithm's own argument (DESIGN.md §Perf): the fixpoint of pointer chasing
+is invariant under restricted jumps, and the remaining *global* doubling
+loop starts near-converged.  One HBM read + one write per voxel buys all
+intra-tile rounds.
+
+Slab extents need not divide the tile: the x axis is padded up to the tile
+grid with an inert fill (order ``iinfo.min`` / mask ``False``) that can
+never win an argmax, so pad rows self-point and are sliced back off
+(pad-and-mask, deviation (p) in DESIGN.md).
+
+Returns ``(pointers, rounds)``: pointers are flat ids of the input array
+(same local-id convention as `grid_steepest`; ``-1`` for unmasked CC
+vertices), rounds is the max in-tile saturation round count over slabs —
+surfaced as ``DPCStats.kernel_rounds`` by the distributed entry points.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.steepest import neighbor_offsets
+
+# connectivities with a 3-D offset table (the kernel is 3-D only; ops.py
+# dispatches every other case to the jnp fallback)
+KERNEL_CONNECTIVITIES = (6, 14, 18, 26)
+
+
+def _shifted(a, off, fill_val):
+    """a[p + off] within the tile, fill outside (static shifts)."""
+    pads = [(max(-o, 0), max(o, 0)) for o in off]
+    padded = jnp.pad(a, pads, constant_values=fill_val)
+    sl = tuple(slice(max(o, 0), max(o, 0) + s)
+               for o, s in zip(off, a.shape))
+    return padded[sl]
+
+
+def _kernel(center, lo, hi, *rest, offsets, block_x, R, fill, mode,
+            max_rounds, id_dtype, has_self_mask, n_real):
+    if has_self_mask:
+        smask_ref, out_ref, rounds_ref = rest
+    else:
+        out_ref, rounds_ref = rest
+    i = pl.program_id(0)
+    ext = jnp.concatenate([lo[...], center[...], hi[...]], axis=0)
+    z = ext.shape[2]
+    # flat ids of the extended tile in the (padded) input array (row-major,
+    # x-major layout); the lo plane sits at global x = i*block_x - 1
+    base = (i * block_x - 1).astype(id_dtype) * R
+    gids = base + jax.lax.broadcasted_iota(id_dtype, ext.shape, 0) * R \
+        + jax.lax.broadcasted_iota(id_dtype, ext.shape, 1) * z \
+        + jax.lax.broadcasted_iota(id_dtype, ext.shape, 2)
+
+    minus1 = jnp.asarray(-1, id_dtype)
+    if mode == "manifold":
+        # stacked candidates + ONE argmax, not a chain of per-offset selects
+        # — the chained-where form sends XLA:CPU fusion into minutes-long
+        # compiles at connectivity >= 14 (same pathology grid_steepest works
+        # around).  Self is candidate 0, so argmax's first-max-wins tie rule
+        # keeps self on ties, which only occur at the inert fill value.
+        cand_val = jnp.stack([ext] + [_shifted(ext, off, fill)
+                                      for off in offsets])
+        cand_idx = jnp.stack([gids] + [_shifted(gids, off, minus1)
+                                       for off in offsets])
+        choice = jnp.argmax(cand_val, axis=0)
+        ptr = jnp.take_along_axis(cand_idx, choice[None], axis=0)[0][1:-1]
+        # ragged-pad rows (ids past the real extent) sit BELOW every real
+        # order value, so they'd point into the real region and burn chase
+        # rounds; pin them to self — inert fixed points, sliced off outside
+        own = gids[1:-1]
+        ptr = jnp.where(own < n_real, ptr, own)
+        masked = None
+    else:  # "cc": largest masked neighbor id (incl. self), -1 unmasked
+        key = jnp.where(ext != 0, gids, minus1)
+        best = key
+        for off in offsets:
+            best = jnp.maximum(best, _shifted(key, off, minus1))
+        masked = ext[1:-1] != 0
+        ptr = jnp.where(masked, best[1:-1], minus1)
+
+    if has_self_mask:
+        # ghost override: (masked) ghosts pretend to be maxima / roots
+        keep = smask_ref[...] != 0
+        if masked is not None:
+            keep = keep & masked
+        ptr = jnp.where(keep, gids[1:-1], ptr)
+
+    # in-tile saturation: doubling rounds confined to this slab's id range;
+    # out-of-tile and negative pointers are fixed points (ghost boundary)
+    tsize = block_x * R
+    base_c = (i * block_x).astype(id_dtype) * R
+    d0 = ptr.reshape(-1)
+
+    def cond(state):
+        _, changed, r = state
+        return changed & (r < max_rounds)
+
+    def body(state):
+        d, _, r = state
+        local = d - base_c
+        in_tile = (d >= 0) & (local >= 0) & (local < tsize)
+        idx = jnp.clip(local, 0, tsize - 1).astype(jnp.int32)
+        nd = jnp.take(d, idx, axis=0)
+        nxt = jnp.where(in_tile, nd, d)
+        return nxt, jnp.any(nxt != d), r + jnp.int32(1)
+
+    d, _, rounds = lax.while_loop(
+        cond, body, (d0, jnp.asarray(True), jnp.int32(0)))
+    out_ref[...] = d.reshape(ptr.shape)
+    rounds_ref[...] = jnp.full((1,), rounds, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("connectivity", "mode",
+                                             "block_x", "interpret",
+                                             "id_dtype"))
+def fused_local_phase(field: jax.Array, connectivity: int = 6,
+                      mode: str = "manifold", self_mask=None,
+                      block_x: int = 8, interpret: bool = True,
+                      id_dtype=None):
+    """Fused steepest/mask-argmax init + in-tile saturation per x-slab.
+
+    field: (X, Y, Z) int order field (``mode="manifold"``; unique values,
+    any inert fill strictly below them) or bool/int feature mask
+    (``mode="cc"``).  self_mask: optional (X, Y, Z) bool — positions forced
+    to self-pointers in the init (the distributed ghost layer).  Returns
+    ((X, Y, Z) flat-id pointers, int32 max in-tile rounds).
+    """
+    if field.ndim != 3:
+        raise ValueError(
+            f"fused_local_phase is a 3-D x-slab kernel; got a {field.ndim}-D "
+            f"field of shape {field.shape} — use the jnp fallback in "
+            "repro.kernels.ops (impl='ref'), which dispatches it for you")
+    if connectivity not in KERNEL_CONNECTIVITIES:
+        raise ValueError(
+            f"fused_local_phase supports 3-D connectivities "
+            f"{KERNEL_CONNECTIVITIES}, got {connectivity}")
+    if mode not in ("manifold", "cc"):
+        raise ValueError(f"mode must be 'manifold' or 'cc', got {mode!r}")
+    x, y, z = field.shape
+    if id_dtype is None:
+        id_dtype = jnp.int32 if field.size < 2**31 else jnp.int64
+    if id_dtype == jnp.int64 and not jax.config.jax_enable_x64:
+        raise ValueError("int64 pointer ids require jax_enable_x64 "
+                         "(ids would silently wrap to int32)")
+
+    if mode == "manifold":
+        key = field
+        fill = jnp.iinfo(field.dtype).min
+    else:
+        key = field.astype(jnp.int32)   # 0/1 mask; fill 0 = unmasked
+        fill = 0
+
+    # ragged x extent: pad up to the tile grid with the inert fill — pad
+    # rows self-point (fill never wins an argmax) and are sliced back off
+    n_tiles = -(-x // block_x)
+    x_pad = n_tiles * block_x
+    if x_pad != x:
+        key = jnp.pad(key, [(0, x_pad - x), (0, 0), (0, 0)],
+                      constant_values=fill)
+    # pre-sliced halo planes: lo[i] = key[i*bx - 1], hi[i] = key[(i+1)*bx]
+    padded = jnp.concatenate([
+        jnp.full((1, y, z), fill, key.dtype), key,
+        jnp.full((1, y, z), fill, key.dtype)], axis=0)
+    lo = padded[0::block_x][:n_tiles]
+    hi = padded[block_x + 1::block_x][:n_tiles]
+
+    operands = [key, lo, hi]
+    in_specs = [
+        pl.BlockSpec((block_x, y, z), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, y, z), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, y, z), lambda i: (i, 0, 0)),
+    ]
+    if self_mask is not None:
+        sm = self_mask.astype(jnp.int32)
+        if x_pad != x:
+            sm = jnp.pad(sm, [(0, x_pad - x), (0, 0), (0, 0)])
+        operands.append(sm)
+        in_specs.append(pl.BlockSpec((block_x, y, z), lambda i: (i, 0, 0)))
+
+    tsize = block_x * y * z
+    # chain <= tile size, doubling resolves it in ceil(log2) rounds, plus
+    # the final no-change verification round
+    max_rounds = max((tsize - 1).bit_length(), 1) + 1
+    kernel = functools.partial(
+        _kernel, offsets=neighbor_offsets(3, connectivity), block_x=block_x,
+        R=y * z, fill=fill, mode=mode, max_rounds=max_rounds,
+        id_dtype=id_dtype, has_self_mask=self_mask is not None,
+        n_real=x * y * z)
+    ptr, rounds = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((block_x, y, z), lambda i: (i, 0, 0)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((x_pad, y, z), id_dtype),
+                   jax.ShapeDtypeStruct((n_tiles,), jnp.int32)],
+        interpret=interpret,
+    )(*operands)
+    if x_pad != x:
+        ptr = ptr[:x]
+    return ptr, jnp.max(rounds)

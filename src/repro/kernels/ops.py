@@ -9,25 +9,78 @@ HLO stays portable across backends.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from . import ref
 from .steepest_neighbor import steepest_neighbor as _steepest_kernel
 from .block_pathcompress import block_pathcompress as _bpc_kernel
 from .flash_attention import flash_attention as _flash_kernel
 from .segment_bag import segment_bag as _bag_kernel
+from .fused_local_phase import (KERNEL_CONNECTIVITIES,
+                                fused_local_phase as _fused_kernel)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _grid_kernel_ok(field, connectivity: int) -> bool:
+    """The grid stencil kernels are 3-D x-slab programs; 2-D fields and
+    connectivities outside the 3-D offset table take the jnp fallback."""
+    return field.ndim == 3 and connectivity in KERNEL_CONNECTIVITIES
+
+
 def steepest_neighbor(order, connectivity: int = 6, impl: str = "auto",
                       block_x: int = 8):
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+    if (impl == "ref" or not _grid_kernel_ok(order, connectivity)
+            or (impl == "auto" and not _on_tpu())):
         from repro.core.steepest import grid_steepest
         return grid_steepest(order, connectivity).reshape(order.shape)
     return _steepest_kernel(order, connectivity, block_x=block_x,
                             interpret=not _on_tpu())
+
+
+def fused_local_phase(field, connectivity: int = 6, mode: str = "manifold",
+                      self_mask=None, impl: str = "auto", block_x: int = 8,
+                      id_dtype=None):
+    """Fused block-local phase: pointer init + in-tile saturation rounds.
+
+    The hot-path dispatch used by `_manifold_block` / `_cc_block` and the
+    pure grid entry points.  Returns ``(pointers, kernel_rounds)`` with the
+    SAME final-label contract on every path: the pointer array has the same
+    chase fixpoint as the plain init, so the global `path_compress` that
+    follows converges to bit-identical labels — the kernel path just starts
+    it near-converged (DESIGN.md §Perf).
+
+    impl="auto": compiled kernel on TPU, jnp init elsewhere;
+    impl="kernel": force the kernel (interpret mode off-TPU — tests/benches);
+    impl="ref": force the jnp init (``kernel_rounds == 0``).
+    2-D fields and unsupported connectivities always fall back.
+    """
+    if impl not in ("auto", "kernel", "ref"):
+        raise ValueError(f"impl must be auto|kernel|ref, got {impl!r}")
+    use_kernel = (impl != "ref" and _grid_kernel_ok(field, connectivity)
+                  and (impl == "kernel" or _on_tpu()))
+    if use_kernel:
+        return _fused_kernel(field, connectivity, mode=mode,
+                             self_mask=self_mask, block_x=block_x,
+                             interpret=not _on_tpu(), id_dtype=id_dtype)
+    from repro.core.steepest import grid_steepest, grid_mask_argmax
+    if mode == "manifold":
+        d0 = grid_steepest(field, connectivity)
+    elif mode == "cc":
+        d0 = grid_mask_argmax(field, connectivity)
+    else:
+        raise ValueError(f"mode must be 'manifold' or 'cc', got {mode!r}")
+    if id_dtype is not None:
+        d0 = d0.astype(id_dtype)
+    if self_mask is not None:
+        keep = self_mask.ravel()
+        if mode == "cc":
+            keep = keep & (field.ravel() != 0)
+        ids = jnp.arange(field.size, dtype=d0.dtype)
+        d0 = jnp.where(keep, ids, d0)
+    return d0.reshape(field.shape), jnp.int32(0)
 
 
 def block_pathcompress(d, rounds: int = 4, block: int = 4096,

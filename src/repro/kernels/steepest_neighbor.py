@@ -42,15 +42,16 @@ def _kernel(center, lo, hi, out, *, offsets, block_x, R, fill):
                    for o, s in zip(off, a.shape))
         return padded[sl]
 
-    best_val = ext
-    best_idx = gids
-    for off in offsets:
-        cv = shifted(ext, off, fill)
-        ci = shifted(gids, off, -1)
-        better = cv > best_val
-        best_val = jnp.where(better, cv, best_val)
-        best_idx = jnp.where(better, ci, best_idx)
-    out[...] = best_idx[1:-1]
+    # stacked candidates + ONE argmax (not chained per-offset selects, which
+    # send XLA:CPU fusion into minutes-long compiles at connectivity >= 14);
+    # self is candidate 0, so first-max-wins keeps self on ties — ties only
+    # occur at the inert fill value
+    cand_val = jnp.stack([ext] + [shifted(ext, off, fill)
+                                  for off in offsets])
+    cand_idx = jnp.stack([gids] + [shifted(gids, off, -1)
+                                   for off in offsets])
+    choice = jnp.argmax(cand_val, axis=0)
+    out[...] = jnp.take_along_axis(cand_idx, choice[None], axis=0)[0][1:-1]
 
 
 @functools.partial(jax.jit,
@@ -59,10 +60,21 @@ def steepest_neighbor(order: jax.Array, connectivity: int = 6,
                       block_x: int = 8, interpret: bool = True) -> jax.Array:
     """order: (X, Y, Z) int32 (unique values >= 0).  Returns (X, Y, Z) int32
     global flat ids.  On-domain boundary handled by -fill halo planes."""
+    if order.ndim != 3:
+        raise ValueError(
+            f"steepest_neighbor is a 3-D x-slab kernel; got a {order.ndim}-D "
+            f"field of shape {order.shape} — repro.kernels.ops dispatches "
+            "such inputs to the jnp grid_steepest fallback")
+    try:
+        offsets = neighbor_offsets(3, connectivity)
+    except ValueError as e:
+        raise ValueError(
+            f"steepest_neighbor: connectivity {connectivity} has no 3-D "
+            "offset table; repro.kernels.ops dispatches it to the jnp "
+            "fallback") from e
     x, y, z = order.shape
     if x % block_x:
         block_x = 1
-    offsets = neighbor_offsets(3, connectivity)
     fill = jnp.iinfo(order.dtype).min
     nblk = x // block_x
     # pre-sliced halo planes: lo[i] = order[i*bx - 1], hi[i] = order[(i+1)*bx]

@@ -1,5 +1,10 @@
 """Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
 sweeping shapes and dtypes as the deliverable requires."""
+import os
+import subprocess
+import sys
+import textwrap
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -8,8 +13,13 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.steepest_neighbor import steepest_neighbor
 from repro.kernels.block_pathcompress import block_pathcompress
+from repro.kernels.fused_local_phase import fused_local_phase
 from repro.kernels.flash_attention import flash_attention
 from repro.core.steepest import neighbor_offsets, grid_steepest
+
+from oracles import GRID_SEED_CORPUS, ragged_grid_case
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
 # --- steepest_neighbor -------------------------------------------------------
@@ -37,6 +47,21 @@ def test_steepest_kernel_vs_core():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("conn", [18, 26])
+def test_steepest_kernel_full_neighborhoods(conn):
+    """Digital-topology 18/26 neighborhoods (satellite of the fused-kernel
+    PR): offset tables are symmetric and the kernel matches the oracle."""
+    offs = neighbor_offsets(3, conn)
+    assert len(offs) == conn
+    assert all(tuple(-o for o in off) in offs for off in offs)
+    rng = np.random.default_rng(conn)
+    order = jnp.asarray(rng.permutation(8 * 5 * 7).reshape(8, 5, 7)
+                        .astype(np.int32))
+    got = steepest_neighbor(order, conn, block_x=4, interpret=True)
+    want = ref.steepest_neighbor_ref(order, offs)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 @pytest.mark.parametrize("block_x", [1, 2, 8])
 def test_steepest_kernel_blocking_invariance(block_x):
     rng = np.random.default_rng(1)
@@ -45,6 +70,198 @@ def test_steepest_kernel_blocking_invariance(block_x):
     got = steepest_neighbor(order, 6, block_x=block_x, interpret=True)
     want = ref.steepest_neighbor_ref(order, neighbor_offsets(3, 6))
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --- fused_local_phase -------------------------------------------------------
+
+
+def _fused_fixpoint_check(field, conn, mode, ptr):
+    """The fused pointers must share their path_compress fixpoint with the
+    plain unfused init — the contract that keeps final labels bit-identical."""
+    from repro.core.pathcompress import path_compress
+    from repro.core.steepest import grid_mask_argmax
+    if mode == "manifold":
+        d0 = grid_steepest(field, conn)
+    else:
+        d0 = grid_mask_argmax(field, conn)
+    want, _ = path_compress(d0)
+    got, _ = path_compress(ptr.ravel().astype(d0.dtype))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("conn", [6, 14, 18, 26])
+@pytest.mark.parametrize("mode", ["manifold", "cc"])
+def test_fused_kernel_vs_ref(conn, mode):
+    """Kernel == bit-exact oracle (pointers AND round count) on a ragged
+    prime extent with a tile size forcing a ragged last slab, plus the
+    distributed self-mask override."""
+    shape = (7, 3, 5)
+    rng = np.random.default_rng(conn * 7 + (mode == "cc"))
+    if mode == "manifold":
+        field = jnp.asarray(rng.permutation(int(np.prod(shape)))
+                            .reshape(shape).astype(np.int32))
+    else:
+        field = jnp.asarray(rng.random(shape) < 0.6)
+    smask = jnp.asarray(rng.random(shape) < 0.2)
+    got, rounds = fused_local_phase(field, conn, mode=mode, self_mask=smask,
+                                    block_x=4, interpret=True)
+    want, wrounds = ref.fused_local_phase_ref(field, conn, mode=mode,
+                                              self_mask=smask, block_x=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(rounds) == int(wrounds) >= 1
+
+
+@pytest.mark.parametrize("seed", GRID_SEED_CORPUS)
+def test_fused_kernel_corpus(seed):
+    """Ragged seed corpus (prime extents): kernel == oracle AND the fused
+    pointers reach the same fixpoint as grid_steepest/grid_mask_argmax +
+    path_compress (2-D corpus cases are covered by the dispatch fallback
+    tests — the kernel itself is 3-D only)."""
+    shape, _, conn, mask_p = ragged_grid_case(seed)
+    if len(shape) != 3:
+        pytest.skip("fused kernel is 3-D only")
+    rng = np.random.default_rng(seed)
+    order = jnp.asarray(rng.permutation(int(np.prod(shape)))
+                        .reshape(shape).astype(np.int32))
+    mask = jnp.asarray(rng.random(shape) < mask_p)
+    for mode, field in (("manifold", order), ("cc", mask)):
+        got, rounds = fused_local_phase(field, conn, mode=mode, block_x=4,
+                                        interpret=True)
+        want, wrounds = ref.fused_local_phase_ref(field, conn, mode=mode,
+                                                  block_x=4)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert int(rounds) == int(wrounds)
+        _fused_fixpoint_check(field, conn, mode, got)
+
+
+@pytest.mark.parametrize("block_x", [1, 3, 8])
+def test_fused_kernel_blocking_invariance(block_x):
+    """Any tile size gives the same compress fixpoint (block_x=3 on x=13
+    forces a ragged last slab; block_x=1 degenerates to pure init + the
+    single-plane saturation)."""
+    shape = (13, 2, 3)
+    rng = np.random.default_rng(block_x)
+    order = jnp.asarray(rng.permutation(int(np.prod(shape)))
+                        .reshape(shape).astype(np.int32))
+    got, _ = fused_local_phase(order, 6, mode="manifold", block_x=block_x,
+                               interpret=True)
+    want, _ = ref.fused_local_phase_ref(order, 6, mode="manifold",
+                                        block_x=block_x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    _fused_fixpoint_check(order, 6, "manifold", got)
+
+
+def test_fused_dispatch_fallback_and_validation():
+    """ops.fused_local_phase: jnp fallback for 2-D fields and unsupported
+    connectivities (kernel_rounds == 0), ValueError on a bad impl."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(5)
+    order2d = jnp.asarray(rng.permutation(30).reshape(5, 6).astype(np.int32))
+    d, r = ops.fused_local_phase(order2d, connectivity=4, mode="manifold",
+                                 impl="kernel")
+    assert d.shape == (5, 6) and int(r) == 0
+    order3d = jnp.asarray(rng.permutation(60).reshape(5, 4, 3)
+                          .astype(np.int32))
+    got = ops.fused_local_phase(order3d, 6, mode="manifold", impl="ref")[0]
+    want = grid_steepest(order3d, 6).reshape(order3d.shape)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    with pytest.raises(ValueError, match="impl"):
+        ops.fused_local_phase(order3d, 6, impl="nope")
+    with pytest.raises(ValueError, match="mode"):
+        ops.fused_local_phase(order3d, 6, mode="nope")
+
+
+def test_fused_kernel_rejects_2d_and_bad_conn():
+    rng = np.random.default_rng(6)
+    order2d = jnp.asarray(rng.permutation(30).reshape(5, 6).astype(np.int32))
+    with pytest.raises(ValueError, match="3-D"):
+        fused_local_phase(order2d, 4)
+    order3d = jnp.asarray(rng.permutation(60).reshape(5, 4, 3)
+                          .astype(np.int32))
+    with pytest.raises(ValueError, match="connectivit"):
+        fused_local_phase(order3d, 5)
+
+
+def test_steepest_kernel_rejects_2d_and_bad_conn():
+    """Satellite: steepest_neighbor raises a clear ValueError instead of
+    producing wrong halo geometry on inputs it cannot tile."""
+    rng = np.random.default_rng(7)
+    order2d = jnp.asarray(rng.permutation(30).reshape(5, 6).astype(np.int32))
+    with pytest.raises(ValueError, match="3-D"):
+        steepest_neighbor(order2d, 4, interpret=True)
+    order3d = jnp.asarray(rng.permutation(60).reshape(5, 4, 3)
+                          .astype(np.int32))
+    with pytest.raises(ValueError, match="fallback"):
+        steepest_neighbor(order3d, 5, interpret=True)
+
+
+def test_fused_kernel_rejects_int64_without_x64():
+    assert not jax.config.jax_enable_x64  # test-process invariant
+    order = jnp.asarray(np.arange(24, dtype=np.int32).reshape(4, 3, 2))
+    with pytest.raises(ValueError, match="x64"):
+        fused_local_phase(order, 6, id_dtype=jnp.int64)
+
+
+_FUSED_X64_WORKER = textwrap.dedent("""
+    import os
+    os.environ["JAX_ENABLE_X64"] = "1"
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.fused_local_phase import fused_local_phase
+    from repro.kernels.ref import fused_local_phase_ref
+
+    assert jax.config.jax_enable_x64
+    rng = np.random.default_rng(11)
+    shape = (7, 3, 4)
+    order = jnp.asarray(rng.permutation(int(np.prod(shape)))
+                        .reshape(shape).astype(np.int32))
+    got, r = fused_local_phase(order, 14, mode="manifold", block_x=4,
+                               interpret=True, id_dtype=jnp.int64)
+    assert got.dtype == jnp.int64
+    want, wr = fused_local_phase_ref(order, 14, mode="manifold", block_x=4,
+                                     id_dtype=jnp.int64)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(r) == int(wr)
+    print("FUSED-X64-OK")
+""")
+
+
+def test_fused_kernel_int64_ids_under_x64():
+    """Subprocess: the x64 flag is global, so the int64 pointer-id case must
+    not leak into this (x64-off) test process."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    proc = subprocess.run([sys.executable, "-c", _FUSED_X64_WORKER], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "FUSED-X64-OK" in proc.stdout
+
+
+def test_pure_entry_points_fused_parity():
+    """descending/ascending manifold, ms_segmentation and CC grid labels are
+    bit-identical between the default (jnp) and forced-kernel dispatch."""
+    from repro.core.connected_components import connected_components_grid
+    from repro.core.ms_segmentation import (ascending_manifold,
+                                            descending_manifold,
+                                            ms_segmentation)
+    rng = np.random.default_rng(8)
+    shape = (7, 4, 4)
+    order = jnp.asarray(rng.permutation(int(np.prod(shape)))
+                        .reshape(shape).astype(np.int32))
+    mask = jnp.asarray(rng.random(shape) < 0.55)
+    for fn in (descending_manifold, ascending_manifold):
+        a, _ = fn(order, 6)
+        b, _ = fn(order, 6, fused_impl="kernel")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    s1 = ms_segmentation(order, 6)
+    s2 = ms_segmentation(order, 6, fused_impl="kernel")
+    np.testing.assert_array_equal(np.asarray(s1.segmentation),
+                                  np.asarray(s2.segmentation))
+    c1 = connected_components_grid(mask, 6)
+    c2 = connected_components_grid(mask, 6, fused_impl="kernel")
+    np.testing.assert_array_equal(np.asarray(c1.labels),
+                                  np.asarray(c2.labels))
 
 
 # --- block_pathcompress ------------------------------------------------------
@@ -70,6 +287,34 @@ def test_block_pathcompress_vs_ref(n, block, rounds):
         ref.block_pathcompress_ref(d[i:i + block], rounds, base=i)
         for i in range(0, n, block)])
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_block_pathcompress_bucketed_recompile():
+    """Satellite: request lengths snap to pow2 bucket capacities OUTSIDE the
+    jit boundary, so one executable serves every length in a bucket (the
+    serving engine replays ragged request streams; per-length recompiles
+    were the cache-miss hot spot)."""
+    from repro.kernels.block_pathcompress import _padded_call
+
+    def chain(n, seed):
+        rng = np.random.default_rng(seed)
+        d = np.arange(n)
+        for v in range(n - 1):
+            if rng.random() < 0.8:
+                d[v] = rng.integers(v + 1, n)
+        return jnp.asarray(d, dtype=jnp.int32)
+
+    _padded_call._clear_cache()
+    for n in (100, 97, 80, 128):          # one bucket: cap 128
+        d = chain(n, n)
+        got = block_pathcompress(d, rounds=3, block=32, interpret=True)
+        want = jnp.concatenate([
+            ref.block_pathcompress_ref(d[i:i + 32], 3, base=i)
+            for i in range(0, n, 32)])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert _padded_call._cache_size() == 1
+    block_pathcompress(chain(130, 0), rounds=3, block=32, interpret=True)
+    assert _padded_call._cache_size() == 2  # new bucket: cap 256
 
 
 def test_block_pathcompress_then_global_converges():
