@@ -227,7 +227,8 @@ def kernels():
     _emit("kernel_segment_bag_ref", us_r, "take+segment_sum jnp")
 
 
-def serve_throughput(n_requests: int = 24, repeat: int = 3):
+def serve_throughput(n_requests: int = 24, repeat: int = 3,
+                     arrival: str = "closed"):
     """Batched multi-tenant serving (DESIGN.md §Serve): replay one mixed
     CC / MS / manifold / threshold-sweep request sequence through the
     TopologyEngine.  Pass 0 compiles one executable per layout bucket; the
@@ -237,7 +238,16 @@ def serve_throughput(n_requests: int = 24, repeat: int = 3):
     pad fraction of the bucketed layouts (the bounded-padding budget).
     Sizes come from configs/serve_topology.py smoke_config — the bench
     measures the serving layer (bucketing, batching, cache), not kernel
-    FLOPs, so small prime extents are the interesting regime."""
+    FLOPs, so small prime extents are the interesting regime.
+
+    `arrival="open"` additionally runs the async plane (DESIGN.md
+    §Serve-v2): first the SAME closed burst through `AsyncTopologyEngine`
+    (the apples-to-apples throughput comparison — the acceptance gate is
+    that the async plane's bookkeeping does not cost warm req/s), then an
+    open-loop pass with Poisson arrivals and per-request deadlines on a
+    virtual clock with measured execution wall time charged in — the row
+    that carries deadline-hit rate and latency percentiles.  The async rows
+    land in BENCH_serve_async.json along with the replayable trace."""
     from repro import configs
     from repro.serve import TopologyEngine
     from repro.serve.workload import synthetic_requests
@@ -263,6 +273,109 @@ def serve_throughput(n_requests: int = 24, repeat: int = 3):
           f"pad_fraction={s.pad_fraction:.2f};executables={len(eng._exec)}")
     assert s.hit_rate >= 0.5, (
         f"repeated-layout hit rate {s.hit_rate:.2f} < 0.5")
+    if arrival != "open":
+        return
+
+    from repro.serve import AsyncTopologyEngine, VirtualClock
+    from repro.serve.workload import synthetic_trace
+    sync_warm_rps = n_requests / warm
+
+    # (1) closed burst through the async plane: identical executions once
+    # warm, so any gap vs the sync engine is pure request-plane overhead
+    aeng = AsyncTopologyEngine(min_extent=cfg.min_extent,
+                               max_batch=cfg.max_batch,
+                               clock=VirtualClock())
+
+    def closed_pass():
+        t0 = time.perf_counter()
+        hs = [aeng.submit(r) for r in reqs]
+        aeng.drain()
+        assert all(h.done() for h in hs)
+        return time.perf_counter() - t0
+
+    closed_pass()                                     # compile
+    warm_async = min(closed_pass() for _ in range(max(repeat - 1, 1)))
+    async_rps = n_requests / warm_async
+    _emit(f"serve_async_closed_warm_{n_requests}",
+          warm_async / n_requests * 1e6,
+          f"rps={async_rps:.1f};hit_rate={aeng.stats.hit_rate:.2f};"
+          f"vs_sync={async_rps / sync_warm_rps:.2f}")
+
+    # (2) open-loop: trace arrivals + deadlines, virtual time, execution
+    # wall time charged into the clock so deadline hits reflect real cost
+    trace = synthetic_trace(n_requests, cfg.shapes, mix=cfg.mix,
+                            connectivity=cfg.connectivity,
+                            sweep_k=cfg.sweep_k, seed=0, rate=cfg.rate,
+                            deadline_slack=cfg.deadline_slack)
+    oeng = AsyncTopologyEngine(min_extent=cfg.min_extent,
+                               max_batch=cfg.max_batch,
+                               cache_capacity=cfg.cache_capacity,
+                               slot_cost_cells=cfg.slot_cost_cells or None,
+                               clock=VirtualClock(),
+                               charge_execution_time=True)
+
+    def open_pass():
+        base = oeng.clock.now()
+        t0 = time.perf_counter()
+        hs = []
+        for req, (t, dl) in zip(trace.requests(), trace.arrivals):
+            tt = base + t
+            if tt > oeng.clock.now():
+                oeng.advance(tt - oeng.clock.now())
+            hs.append(oeng.submit(
+                req, deadline=None if dl is None else base + dl))
+        oeng.drain()
+        assert all(h.done() for h in hs)
+        return time.perf_counter() - t0
+
+    open_pass()                                       # cold (compiles)
+    n_cold = len(oeng.latencies)
+    hits0, miss0 = oeng.stats.deadline_hits, oeng.stats.deadline_misses
+    wall_open = open_pass()                           # warm, measured
+    so = oeng.stats
+    lat = np.asarray(oeng.latencies[n_cold:], dtype=float)
+    p50 = float(np.percentile(lat, 50)) if lat.size else 0.0
+    p99 = float(np.percentile(lat, 99)) if lat.size else 0.0
+    warm_hits = so.deadline_hits - hits0
+    warm_total = warm_hits + (so.deadline_misses - miss0)
+    dhr = warm_hits / warm_total if warm_total else 1.0
+    assert (so.flush_capacity + so.flush_deadline + so.flush_drain
+            + so.flush_retry == so.batches)
+    _emit(f"serve_async_open_warm_{n_requests}",
+          wall_open / n_requests * 1e6,
+          f"rps={n_requests / wall_open:.1f};deadline_hit_rate={dhr:.2f};"
+          f"p50_ms={p50 * 1e3:.2f};p99_ms={p99 * 1e3:.2f};"
+          f"evictions={so.cache_evictions};"
+          f"queue_peak={so.queue_depth_peak}")
+
+    import json
+    out = os.path.join(os.getcwd(), "BENCH_serve_async.json")
+    with open(out, "w") as f:
+        json.dump({
+            "sync_warm_rps": sync_warm_rps,
+            "async_closed_warm_rps": async_rps,
+            "open_loop": {
+                "warm_rps": n_requests / wall_open,
+                "deadline_hit_rate": dhr,
+                "latency_p50_ms": p50 * 1e3,
+                "latency_p99_ms": p99 * 1e3,
+                "flush_reasons": {
+                    "capacity": so.flush_capacity,
+                    "deadline": so.flush_deadline,
+                    "drain": so.flush_drain,
+                    "retry": so.flush_retry},
+                "cache_evictions": so.cache_evictions,
+                "queue_depth_peak": so.queue_depth_peak,
+            },
+            "trace": trace.as_dict(),
+        }, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {out}", file=sys.stderr)
+    # the acceptance gate, with head-room for CI timer noise: the async
+    # plane must not cost warm throughput vs the synchronous engine
+    assert async_rps >= 0.75 * sync_warm_rps, (
+        f"async warm {async_rps:.1f} req/s < 0.75x sync warm "
+        f"{sync_warm_rps:.1f} req/s")
 
 
 def lm_train_microbench():
@@ -321,15 +434,21 @@ def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     tiny = "--tiny" in argv
     size = None
+    arrival = "closed"
     for a in argv:
         if a.startswith("--size="):
             size = a.split("=", 1)[1]
+        if a.startswith("--arrival="):
+            arrival = a.split("=", 1)[1]
+    if arrival not in ("closed", "open"):
+        sys.exit(f"--arrival must be closed or open, got {arrival!r}")
     names = [a for a in argv if not a.startswith("-")]
     bad_flags = [a for a in argv if a.startswith("-") and a != "--tiny"
-                 and not a.startswith("--size=")]
+                 and not a.startswith("--size=")
+                 and not a.startswith("--arrival=")]
     if bad_flags:
         sys.exit(f"unknown flag(s) {bad_flags}; "
-                 "flags are --tiny and --size=XxYxZ")
+                 "flags are --tiny, --size=XxYxZ and --arrival=closed|open")
     unknown = [n for n in names if n not in _BENCHES]
     if unknown:
         sys.exit(f"unknown benchmark(s) {unknown}; "
@@ -340,6 +459,8 @@ def main(argv=None) -> None:
         kw = dict(tiny_kw if tiny else full_kw)
         if size is not None and n in _SIZED:
             kw[_SIZED[n]] = size
+        if n == "serve_throughput":
+            kw["arrival"] = arrival
         fn(**kw)
     # kernel-facing rows also land in a JSON artifact (BENCH_kernels.json):
     # the fused-vs-unfused round counts are the acceptance numbers of the

@@ -2,13 +2,16 @@
 
 Builds a mixed workload (CC masks, Morse-Smale segmentations, manifold
 queries, threshold sweeps, over several ragged grid extents), serves it
-through `repro.serve.TopologyEngine`, and checks the two contracts from
-DESIGN.md §Serve:
+through `repro.serve.TopologyEngine`, and checks the contracts from
+DESIGN.md §Serve / §Serve-v2:
 
   1. every batched result is bit-identical to the sequential
-     `repro.topology.submit` path, and
+     `repro.topology.submit` path,
   2. replaying the same layouts compiles nothing new — the second bucket
-     occupant is served from the executable cache (hit rate > 0).
+     occupant is served from the executable cache (hit rate > 0), and
+  3. the async deadline-aware plane (queueing, capacity/deadline flushes
+     on a virtual clock) returns the SAME bits through future-style
+     handles, from a workload trace replayable by its seed alone.
 
   PYTHONPATH=src python examples/serve_topology.py
 """
@@ -23,12 +26,16 @@ import numpy as np
 from repro import configs
 from repro.topology import submit_many
 from repro.serve import TopologyEngine
-from repro.serve.workload import synthetic_requests
+from repro.serve.workload import synthetic_trace
 
 cfg = configs.get("serve_topology").smoke_config()
-reqs = synthetic_requests(10, cfg.shapes, mix=cfg.mix,
-                          connectivity=cfg.connectivity,
-                          sweep_k=cfg.sweep_k, seed=0)
+# the trace IS the workload: seed + parameters regenerate identical
+# requests anywhere (drop trace.as_dict() in a bug report to replay it)
+trace = synthetic_trace(10, cfg.shapes, mix=cfg.mix,
+                        connectivity=cfg.connectivity,
+                        sweep_k=cfg.sweep_k, seed=0,
+                        rate=cfg.rate, deadline_slack=cfg.deadline_slack)
+reqs = trace.requests()
 print(f"workload: {len(reqs)} requests over extents "
       f"{sorted({r.shape() for r in reqs})}")
 
@@ -66,4 +73,34 @@ print(f"warm pass: {t_warm * 1e3:.0f}ms "
       f"cache {s.cache_hits} hits / {s.cache_misses} misses "
       f"(hit_rate={s.hit_rate:.2f})")
 print("engine stats:", eng.stats.as_dict())
+
+# contract 3: the async plane — open-loop arrivals with deadlines on a
+# virtual clock; handles resolve on capacity/deadline flushes (or the
+# final drain) and carry the same bits as the sequential facade
+from repro.serve import AsyncTopologyEngine, VirtualClock  # noqa: E402
+
+aeng = AsyncTopologyEngine(min_extent=cfg.min_extent, max_batch=cfg.max_batch,
+                           cache_capacity=cfg.cache_capacity,
+                           slot_cost_cells=cfg.slot_cost_cells or None,
+                           clock=VirtualClock())
+handles = []
+for req, (t_arr, deadline) in zip(trace.requests(), trace.arrivals):
+    if t_arr > aeng.clock.now():
+        aeng.advance(t_arr - aeng.clock.now())     # may deadline-flush
+    handles.append(aeng.submit(req, deadline=deadline))
+aeng.drain()
+for h, q in zip(handles, sequential):
+    assert h.done() and h.exception() is None
+    for f in ("labels", "ascending", "descending", "segmentation"):
+        a, w = getattr(h.result(), f), getattr(q, f)
+        assert (a is None) == (w is None)
+        if a is not None:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(w))
+sa = aeng.stats
+assert (sa.flush_capacity + sa.flush_deadline + sa.flush_drain
+        + sa.flush_retry == sa.batches)
+print(f"async plane: {len(handles)} handles resolved bit-identically; "
+      f"flushes capacity={sa.flush_capacity} deadline={sa.flush_deadline} "
+      f"drain={sa.flush_drain}; deadline_hit_rate={sa.deadline_hit_rate:.2f}; "
+      f"virtual latency mean={sa.latency_mean * 1e3:.1f}ms")
 print("OK")

@@ -18,12 +18,18 @@ class ServeTopologyConfig:
     # engine knobs
     min_extent: int = 8        # bucket floor: smallest padded grid extent
     max_batch: int = 64        # largest batch capacity per execution
+    cache_capacity: int = 64   # bounded LRU on compiled executables
+    slot_cost_cells: int = 0   # layout-merge cost model (0 disables;
+                               # DESIGN.md §Serve-v2)
     # synthetic workload mix (query, weight) for benchmarks / demos
     mix: tuple = (("cc", 0.5), ("ms", 0.2), ("manifold", 0.1),
                   ("threshold_sweep", 0.2))
     # request extents: prime / non-divisible on purpose (bucketing path)
     shapes: tuple = ((96, 96, 96), (97, 61, 43), (64, 96, 48), (101, 53, 37))
     sweep_k: int = 4           # thresholds per sweep request
+    # async plane (open-loop arrivals; DESIGN.md §Serve-v2)
+    rate: float = 50.0         # Poisson arrival rate, requests per second
+    deadline_slack: float = 0.5  # mean request deadline slack, seconds
 
 
 def full_config() -> ServeTopologyConfig:
@@ -33,4 +39,5 @@ def full_config() -> ServeTopologyConfig:
 def smoke_config() -> ServeTopologyConfig:
     return ServeTopologyConfig(
         name="serve-topology-smoke", max_batch=16,
-        shapes=((17, 13, 11), (13, 11, 7), (16, 12, 8)), sweep_k=3)
+        shapes=((17, 13, 11), (13, 11, 7), (16, 12, 8)), sweep_k=3,
+        slot_cost_cells=4096, rate=200.0, deadline_slack=0.25)

@@ -9,6 +9,10 @@ Two serving modes share this entry point:
   # Batched multi-tenant topology queries (DESIGN.md §Serve)
   PYTHONPATH=src python -m repro.launch.serve --topology --smoke \
       --requests 24 --repeat 2
+
+  # Async deadline-aware plane, open-loop arrivals (DESIGN.md §Serve-v2)
+  PYTHONPATH=src python -m repro.launch.serve --topology --async --smoke \
+      --requests 24
 """
 from __future__ import annotations
 
@@ -76,7 +80,9 @@ def serve_topology(args):
 
     mod = configs.get("serve_topology")
     cfg = mod.smoke_config() if args.smoke else mod.full_config()
-    eng = TopologyEngine(min_extent=cfg.min_extent, max_batch=cfg.max_batch)
+    eng = TopologyEngine(min_extent=cfg.min_extent, max_batch=cfg.max_batch,
+                         cache_capacity=cfg.cache_capacity,
+                         slot_cost_cells=cfg.slot_cost_cells or None)
 
     t_total = 0.0
     n_total = 0
@@ -100,6 +106,69 @@ def serve_topology(args):
     return n_total / max(t_total, 1e-9)
 
 
+def serve_topology_async(args):
+    """Drive the async deadline-aware plane over a replayable open-loop
+    trace (DESIGN.md §Serve-v2).
+
+    Arrivals and deadlines come from a `WorkloadTrace` (printed at the end,
+    so any run is replayable from its log alone).  Time runs on a
+    `VirtualClock` with measured execution wall time charged into it, so
+    deadline hits/misses reflect real execute cost while the arrival
+    schedule stays deterministic.
+    """
+    from repro.serve import AsyncTopologyEngine, VirtualClock
+    from repro.serve.workload import synthetic_trace
+
+    mod = configs.get("serve_topology")
+    cfg = mod.smoke_config() if args.smoke else mod.full_config()
+    trace = synthetic_trace(
+        args.requests, cfg.shapes, mix=cfg.mix,
+        connectivity=cfg.connectivity, sweep_k=cfg.sweep_k, seed=args.seed,
+        rate=args.rate if args.rate is not None else cfg.rate,
+        deadline_slack=(args.deadline_slack if args.deadline_slack is not None
+                        else cfg.deadline_slack))
+    eng = AsyncTopologyEngine(
+        min_extent=cfg.min_extent, max_batch=cfg.max_batch,
+        cache_capacity=cfg.cache_capacity,
+        slot_cost_cells=cfg.slot_cost_cells or None,
+        clock=VirtualClock(), charge_execution_time=True)
+
+    t0 = time.perf_counter()
+    handles = []
+    for req, (t, dl) in zip(trace.requests(), trace.arrivals):
+        if t > eng.clock.now():
+            eng.advance(t - eng.clock.now())
+        handles.append(eng.submit(req, deadline=dl))
+    # run time out to the deadline horizon first (so deadline flushes get
+    # their chance), then drain whatever never came under pressure
+    horizon = max((dl for _, dl in trace.arrivals if dl is not None),
+                  default=eng.clock.now())
+    if horizon > eng.clock.now():
+        eng.advance(horizon - eng.clock.now())
+    eng.drain()
+    wall = time.perf_counter() - t0
+    assert all(h.done() for h in handles)
+
+    s = eng.stats
+    assert (s.flush_capacity + s.flush_deadline + s.flush_drain
+            + s.flush_retry == s.batches)
+    lat = np.asarray(eng.latencies)
+    p50, p99 = (float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
+                ) if lat.size else (0.0, 0.0)
+    print(f"[serve-async] {len(handles)} requests in {wall * 1e3:.0f}ms wall "
+          f"({len(handles) / max(wall, 1e-9):.1f} req/s incl. compile); "
+          f"flushes capacity={s.flush_capacity} deadline={s.flush_deadline} "
+          f"drain={s.flush_drain} retry={s.flush_retry}; "
+          f"deadline_hit_rate={s.deadline_hit_rate:.2f}; "
+          f"latency p50={p50 * 1e3:.1f}ms p99={p99 * 1e3:.1f}ms (virtual); "
+          f"evictions={s.cache_evictions} queue_peak={s.queue_depth_peak}")
+    print("[serve-async] engine stats:",
+          json.dumps(eng.stats.as_dict(), sort_keys=True))
+    print("[serve-async] replay trace:",
+          json.dumps(trace.as_dict(), sort_keys=True))
+    return len(handles) / max(wall, 1e-9)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
@@ -115,7 +184,18 @@ def main(argv=None):
     ap.add_argument("--repeat", type=int, default=2,
                     help="topology mode: workload passes (2nd hits the "
                          "executable cache)")
+    ap.add_argument("--async", dest="async_plane", action="store_true",
+                    help="topology mode: async deadline-aware plane with "
+                         "open-loop arrivals (DESIGN.md §Serve-v2)")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="async mode: Poisson arrival rate (req/s); "
+                         "defaults to the config's")
+    ap.add_argument("--deadline-slack", type=float, default=None,
+                    help="async mode: mean deadline slack (s); defaults "
+                         "to the config's")
     args = ap.parse_args(argv)
+    if args.topology and args.async_plane:
+        return serve_topology_async(args)
     if args.topology:
         return serve_topology(args)
     return serve_lm(args)

@@ -1,4 +1,4 @@
-"""Batched multi-tenant topology serving (DESIGN.md §Serve).
+"""Batched multi-tenant topology serving (DESIGN.md §Serve / §Serve-v2).
 
     from repro.serve import TopologyEngine
     from repro.topology import TopologyRequest
@@ -6,9 +6,23 @@
     eng = TopologyEngine()
     results = eng.submit_batch([TopologyRequest("cc", mask=m), ...])
     eng.stats.as_dict()   # requests/batches, cache hit rate, pad waste
-"""
-from .engine import TopologyEngine, EngineStats
-from .bucketing import bucket_shape, batch_capacity, remap_flat_labels
 
-__all__ = ["TopologyEngine", "EngineStats", "bucket_shape",
-           "batch_capacity", "remap_flat_labels"]
+Async plane (queueing, deadline-aware flushing, split-retry, idempotency):
+
+    from repro.serve import AsyncTopologyEngine, VirtualClock
+
+    eng = AsyncTopologyEngine(clock=VirtualClock())
+    h = eng.submit(req, deadline=0.5, idempotency_key="tenant-42/9001")
+    eng.advance(0.5)      # deadline flush (virtual time)
+    h.result()            # bit-identical to repro.topology.submit(req)
+"""
+from .engine import (TopologyEngine, AsyncTopologyEngine, TopologyHandle,
+                     EngineStats)
+from .scheduler import FlushScheduler, VirtualClock, MonotonicClock
+from .bucketing import (bucket_shape, batch_capacity, remap_flat_labels,
+                        merge_adjacent_layouts)
+
+__all__ = ["TopologyEngine", "AsyncTopologyEngine", "TopologyHandle",
+           "EngineStats", "FlushScheduler", "VirtualClock", "MonotonicClock",
+           "bucket_shape", "batch_capacity", "remap_flat_labels",
+           "merge_adjacent_layouts"]

@@ -64,3 +64,53 @@ def pad_waste(real_shapes, padded_shape, capacity) -> tuple:
     """(real_cells, padded_cells) of one bucket execution."""
     real = sum(math.prod(s) for s in real_shapes)
     return real, math.prod(padded_shape) * capacity
+
+
+# --- cost-model layout merging (DESIGN.md §Serve-v2) -------------------------
+
+def adjacent_layouts(small, big) -> bool:
+    """Whether `small` can merge into `big` in one pow2 step: `big`
+    dominates elementwise and costs at most 2x the cells (one axis
+    doubled — the pow2 lattice's nearest-neighbor relation)."""
+    return (len(small) == len(big) and small != big
+            and all(b >= s for s, b in zip(small, big))
+            and math.prod(big) <= 2 * math.prod(small))
+
+
+def merge_adjacent_layouts(layout_counts: dict, slot_cost_cells: int) -> dict:
+    """Cost-model merge plan over observed pow2 layouts.
+
+    `layout_counts` maps each layout (a `bucket_shape` tuple) to the number
+    of items it would serve; the returned dict maps every layout to the
+    layout it should execute under (identity when unmerged).  A layout L
+    merges into an adjacent layout B already in use when the modeled extra
+    pad waste — `(cells(B) - cells(L)) * n_items(L)` — is cheaper than
+    keeping a separate executable slot (`slot_cost_cells`, the cost model's
+    exchange rate between compiled-program slots and padded cells).  Merging
+    is always *correct* (any dominating layout pads inertly and
+    `remap_flat_labels` restores real-extent ids bit-identically); this
+    function only decides when it is *cheap*.
+
+    Greedy smallest-first with chain resolution: if L merged into M and M
+    later merged into N, L's items follow to N (the plan is, fittingly,
+    path-compressed before returning).
+    """
+    target = {L: L for L in layout_counts}
+    if slot_cost_cells is None or slot_cost_cells <= 0:
+        return target
+    counts = dict(layout_counts)
+    for L in sorted(layout_counts, key=lambda s: (math.prod(s), s)):
+        best, best_extra = None, None
+        for B in layout_counts:
+            if target[B] != B or not adjacent_layouts(L, B):
+                continue  # merged-away layouts cannot absorb others
+            extra = (math.prod(B) - math.prod(L)) * counts[L]
+            if best is None or (extra, B) < (best_extra, best):
+                best, best_extra = B, extra
+        if best is not None and best_extra < slot_cost_cells:
+            target[L] = best
+            counts[best] = counts.get(best, 0) + counts.pop(L)
+    for L in target:  # resolve merge chains L -> M -> N
+        while target[target[L]] != target[L]:
+            target[L] = target[target[L]]
+    return target

@@ -1,4 +1,5 @@
-"""Batched multi-tenant topology query engine (DESIGN.md §Serve).
+"""Batched multi-tenant topology query engine (DESIGN.md §Serve) and the
+async deadline-aware serving plane on top of it (DESIGN.md §Serve-v2).
 
 `TopologyEngine.submit_batch` takes heterogeneous `TopologyRequest`s (mixed
 shapes, mixed query kinds) and serves them through a handful of compiled
@@ -14,22 +15,41 @@ executables:
            power of two (`serve.bucketing`), so arbitrary request shapes
            collapse onto few layouts; graph items group by their mesh
            geometry (many masks / thresholds of one mesh batch together);
+           adjacent layouts can merge under a cost model
+           (`slot_cost_cells`, `bucketing.merge_adjacent_layouts`) when
+           the modeled pad waste is cheaper than an executable slot;
   execute  one vmapped (pure) or batched-`shard_map` (distributed) call per
            bucket chunk, so compilation AND the paper's single boundary
-           all_gather amortise across tenants; compiled executables are
-           cached per (layout, capacity) key with hit/miss counters;
+           all_gather amortise across tenants; compiled executables live in
+           a bounded LRU cache (`cache_capacity`) with hit/miss/eviction
+           counters;
   restore  labels slice back to each request's real extent and label VALUES
            remap from padded-shape flat ids to real-shape flat ids, which
            makes every engine result BIT-IDENTICAL to the sequential
-           `repro.topology.submit` path (pinned by tests/test_serve_engine.py).
+           `repro.topology.submit` path (pinned by tests/test_serve_engine.py
+           and, across arrival orders/deadlines/retries/evictions, by
+           tests/test_serve_async.py).
 
-`EngineStats` aggregates requests/items/batches, executable-cache hits and
-misses, and pad waste (real vs padded cells — the bounded-padding budget).
+`AsyncTopologyEngine` adds the request plane: `submit()` returns a
+`TopologyHandle` future, work items queue in a `FlushScheduler` and execute
+when a bucket fills its pow2 capacity, when an admission deadline would
+otherwise be missed, or on `drain()`; a failed bucket execution retries by
+splitting in half so one poisoned request cannot sink its cohort; and
+idempotency-key replays are served from a small result cache.
+
+`EngineStats` aggregates requests/items/batches, executable-cache hits,
+misses and evictions, pad waste, flush reasons (each bucket execution is
+counted under exactly one reason, so the four flush counters always sum to
+`batches`), queue depth, retries/failures, deadline hits, and per-request
+latency sums.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import itertools
 import math
+import time
 from typing import Any
 
 import numpy as np
@@ -47,7 +67,8 @@ from ..core.distributed_graph import (
     distributed_connected_components_graph_batch)
 from ..topology import TopologyRequest, TopologyResult
 from .bucketing import (bucket_shape, batch_capacity, pad_to,
-                        remap_flat_labels, pad_waste)
+                        remap_flat_labels, pad_waste, merge_adjacent_layouts)
+from .scheduler import FlushScheduler, MonotonicClock
 
 
 @dataclasses.dataclass
@@ -58,8 +79,27 @@ class EngineStats:
     batches: int = 0        # bucket-chunk executions
     cache_hits: int = 0     # executable reused for a bucket execution
     cache_misses: int = 0   # executable compiled for a new layout key
+    cache_evictions: int = 0  # executables dropped by the LRU bound
     real_cells: int = 0     # payload cells actually requested
     padded_cells: int = 0   # cells executed after layout + batch padding
+    # why each bucket execution ran (exactly one reason per execution, so
+    # these four always sum to `batches`)
+    flush_capacity: int = 0   # bucket filled its pow2 batch capacity
+    flush_deadline: int = 0   # earliest deadline would otherwise be missed
+    flush_drain: int = 0      # explicit drain (sync submit_batch flushes
+                              # count here: every submit_batch is an
+                              # immediate drain of its own buckets)
+    flush_retry: int = 0      # re-execution of a split half after a failure
+    # async request plane
+    retries: int = 0        # failed executions that were split and retried
+    completed: int = 0      # handles resolved with a result
+    failures: int = 0       # handles resolved with an exception
+    dedup_hits: int = 0     # idempotency-key replays served without work
+    deadline_hits: int = 0     # requests completed at or before deadline
+    deadline_misses: int = 0   # requests completed after their deadline
+    queue_depth_peak: int = 0  # max items queued in the scheduler at once
+    latency_count: int = 0     # requests with a recorded latency
+    latency_sum: float = 0.0   # sum of completion - submission (clock units)
 
     @property
     def hit_rate(self) -> float:
@@ -71,10 +111,22 @@ class EngineStats:
         return (1.0 - self.real_cells / self.padded_cells
                 if self.padded_cells else 0.0)
 
+    @property
+    def deadline_hit_rate(self) -> float:
+        total = self.deadline_hits + self.deadline_misses
+        return self.deadline_hits / total if total else 1.0
+
+    @property
+    def latency_mean(self) -> float:
+        return self.latency_sum / self.latency_count if self.latency_count \
+            else 0.0
+
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["hit_rate"] = self.hit_rate
         d["pad_fraction"] = self.pad_fraction
+        d["deadline_hit_rate"] = self.deadline_hit_rate
+        d["latency_mean"] = self.latency_mean
         return d
 
 
@@ -97,20 +149,42 @@ class _WorkItem:
                             # ("sweep", k)
 
 
+# position of the padded layout inside a grid bucket key (see _bucket_key);
+# merged buckets execute every member under the layout IN THE KEY, which may
+# dominate the member's own next-pow2 layout
+_GRID_LAYOUT_SLOT = 5
+
+_FLUSH_FIELDS = {"capacity": "flush_capacity", "deadline": "flush_deadline",
+                 "drain": "flush_drain", "retry": "flush_retry"}
+
+
 class TopologyEngine:
     """Batched serving front-end for `TopologyRequest`s.
 
-    min_extent: smallest padded grid extent (bucket floor).
-    max_batch:  largest batch capacity per execution; bucket occupancies
-                beyond it run in chunks.
+    min_extent:      smallest padded grid extent (bucket floor).
+    max_batch:       largest batch capacity per execution; bucket
+                     occupancies beyond it run in chunks.
+    cache_capacity:  bound on live compiled executables (LRU eviction;
+                     None disables the bound).  The default is sized so
+                     repeated-layout workloads never evict — replaying a
+                     workload still compiles nothing.
+    slot_cost_cells: cost model for merging adjacent pow2 layouts — a
+                     smaller layout folds into a dominating one when its
+                     modeled extra pad cells stay below this many cells
+                     (None/0 disables merging; DESIGN.md §Serve-v2).
     """
 
-    def __init__(self, min_extent: int = 8, max_batch: int = 64):
+    def __init__(self, min_extent: int = 8, max_batch: int = 64,
+                 cache_capacity: int | None = 64,
+                 slot_cost_cells: int | None = None):
         self.min_extent = int(min_extent)
         self.max_batch = int(max_batch)
+        self.cache_capacity = cache_capacity
+        self.slot_cost_cells = slot_cost_cells
         self.stats = EngineStats()
-        self._exec: dict = {}          # exec key -> (callable, has_stats)
+        self._exec = collections.OrderedDict()  # exec key -> (fn, has_stats)
         self._bucket_runs: dict = {}   # exec key -> executions served
+        assert cache_capacity is None or cache_capacity >= 1
 
     # --- public API -----------------------------------------------------------
 
@@ -131,11 +205,13 @@ class TopologyEngine:
         buckets: dict = {}
         for it in items:
             buckets.setdefault(self._bucket_key(it), []).append(it)
+        buckets = self._merge_grid_buckets(buckets)
 
         outputs: dict = {}   # (req_idx, role) -> (labels np, stats or None)
         for key, group in buckets.items():
             for lo in range(0, len(group), self.max_batch):
-                self._run_bucket(key, group[lo:lo + self.max_batch], outputs)
+                self._run_bucket(key, group[lo:lo + self.max_batch], outputs,
+                                 reason="drain")
 
         return [self._assemble(idx, req, outputs)
                 for idx, req in enumerate(requests)]
@@ -143,7 +219,9 @@ class TopologyEngine:
     def cache_info(self) -> dict:
         return {"hits": self.stats.cache_hits,
                 "misses": self.stats.cache_misses,
+                "evictions": self.stats.cache_evictions,
                 "size": len(self._exec),
+                "capacity": self.cache_capacity,
                 "hit_rate": self.stats.hit_rate,
                 "runs_per_executable": dict(self._bucket_runs)}
 
@@ -193,6 +271,8 @@ class TopologyEngine:
             mesh_key = (None if it.backend == "pure"
                         else (tuple(it.mesh.axis_names),
                               tuple(it.mesh.devices.shape), id(it.mesh)))
+            # the layout sits at _GRID_LAYOUT_SLOT — _run_bucket pads to the
+            # key's layout, not the item's, so merged buckets stay coherent
             return ("grid", it.backend, it.kind, it.connectivity,
                     it.gather_mask,
                     bucket_shape(it.payload.shape, self.min_extent),
@@ -207,6 +287,32 @@ class TopologyEngine:
             graph_key = (id(it.decomp), it.gather_mask)
         return ("graph", it.backend, it.kind, graph_key)
 
+    def _merge_grid_buckets(self, buckets: dict) -> dict:
+        """Apply the cost-model merge plan: grid buckets that differ ONLY in
+        layout fold into an adjacent dominating layout when the modeled pad
+        waste is cheaper than an executable slot (bit-identical either way —
+        restore remaps label values from whatever layout actually ran)."""
+        if not self.slot_cost_cells:
+            return buckets
+        families: dict = {}   # key minus layout -> [full keys]
+        for key in buckets:
+            if key[0] == "grid":
+                fam = key[:_GRID_LAYOUT_SLOT] + key[_GRID_LAYOUT_SLOT + 1:]
+                families.setdefault(fam, []).append(key)
+        for keys in families.values():
+            if len(keys) < 2:
+                continue
+            plan = merge_adjacent_layouts(
+                {k[_GRID_LAYOUT_SLOT]: len(buckets[k]) for k in keys},
+                self.slot_cost_cells)
+            for k in keys:
+                tgt_layout = plan[k[_GRID_LAYOUT_SLOT]]
+                if tgt_layout != k[_GRID_LAYOUT_SLOT]:
+                    tgt = (k[:_GRID_LAYOUT_SLOT] + (tgt_layout,)
+                           + k[_GRID_LAYOUT_SLOT + 1:])
+                    buckets.setdefault(tgt, []).extend(buckets.pop(k))
+        return buckets
+
     def _exec_key(self, bkey: tuple, it: _WorkItem, capacity: int) -> tuple:
         if bkey[0] == "graph" and bkey[1] == "pure":
             # drop the edge-list identity: (n, m) + dtypes determine the
@@ -214,6 +320,24 @@ class TopologyEngine:
             bkey = bkey[:3] + ((it.payload.shape[0],
                                 np.asarray(it.senders).size),)
         return bkey + (capacity, str(it.payload.dtype))
+
+    def _get_executable(self, ekey: tuple, it0: _WorkItem):
+        """LRU lookup-or-build; the cache never holds more than
+        `cache_capacity` executables (evictions are counted, and an evicted
+        layout simply recompiles on its next use — bit-identical, pinned by
+        tests/test_serve_async.py)."""
+        hit = self._exec.get(ekey)
+        if hit is not None:
+            self.stats.cache_hits += 1
+            self._exec.move_to_end(ekey)
+            return hit
+        self.stats.cache_misses += 1
+        built = self._build_executable(it0)
+        self._exec[ekey] = built
+        if self.cache_capacity and len(self._exec) > self.cache_capacity:
+            self._exec.popitem(last=False)
+            self.stats.cache_evictions += 1
+        return built
 
     def _build_executable(self, it: _WorkItem):
         """(callable, has_stats) for one layout bucket.  The callable takes
@@ -251,21 +375,27 @@ class TopologyEngine:
 
     # --- execution ------------------------------------------------------------
 
-    def _run_bucket(self, bkey: tuple, group: list, outputs: dict) -> None:
+    def _execute(self, fn, group, args):
+        """The execution seam: every compiled-executable invocation funnels
+        through here so fault-injection tests can monkeypatch it (group is
+        passed for observability — chosen-request poisoning)."""
+        return fn(*args)
+
+    def _run_bucket(self, bkey: tuple, group: list, outputs: dict,
+                    reason: str = "drain") -> None:
         it0 = group[0]
         capacity = batch_capacity(len(group), self.max_batch)
         ekey = self._exec_key(bkey, it0, capacity)
-        if ekey in self._exec:
-            self.stats.cache_hits += 1
-        else:
-            self.stats.cache_misses += 1
-            self._exec[ekey] = self._build_executable(it0)
+        fn, has_stats = self._get_executable(ekey, it0)
         self._bucket_runs[ekey] = self._bucket_runs.get(ekey, 0) + 1
-        fn, has_stats = self._exec[ekey]
         self.stats.batches += 1
+        # exactly one flush reason per execution (counted BEFORE the call,
+        # so the reason sum tracks `batches` even when the execution fails)
+        field = _FLUSH_FIELDS[reason]
+        setattr(self.stats, field, getattr(self.stats, field) + 1)
 
         if it0.domain == "grid":
-            padded = bucket_shape(it0.payload.shape, self.min_extent)
+            padded = bkey[_GRID_LAYOUT_SLOT]
             fill = False if it0.kind == "cc" else -1
             stack = np.stack(
                 [pad_to(np.asarray(g.payload), padded, fill)
@@ -287,10 +417,11 @@ class TopologyEngine:
         self.stats.padded_cells += padded_cells
 
         if it0.domain == "graph" and it0.backend == "pure":
-            out = fn(jnp.asarray(stack), jnp.asarray(it0.senders),
-                     jnp.asarray(it0.receivers))
+            out = self._execute(fn, group,
+                                (jnp.asarray(stack), jnp.asarray(it0.senders),
+                                 jnp.asarray(it0.receivers)))
         else:
-            out = fn(jnp.asarray(stack))
+            out = self._execute(fn, group, (jnp.asarray(stack),))
         labels, stats = out if has_stats else (out, None)
         labels = np.asarray(jax.block_until_ready(labels))
 
@@ -334,3 +465,253 @@ class TopologyEngine:
         return TopologyResult("threshold_sweep",
                               labels=jnp.asarray(np.stack(labs)),
                               stats=stats, tag=req.tag)
+
+
+# --- async request plane (DESIGN.md §Serve-v2) --------------------------------
+
+
+class TopologyHandle:
+    """Future-like handle for one async request.
+
+    The serving plane is cooperative (single-threaded): `result()` on a
+    pending handle drains the engine — deterministic, and bit-identical to
+    whatever a later flush would have produced anyway."""
+
+    __slots__ = ("request", "deadline", "idempotency_key", "submitted_at",
+                 "completed_at", "_engine", "_result", "_exc", "_done")
+
+    def __init__(self, engine, request, deadline=None, idempotency_key=None):
+        self.request = request
+        self.deadline = deadline
+        self.idempotency_key = idempotency_key
+        self.submitted_at = None
+        self.completed_at = None
+        self._engine = engine
+        self._result = None
+        self._exc = None
+        self._done = False
+
+    def done(self) -> bool:
+        return self._done
+
+    def exception(self):
+        """The exception this handle surfaced, or None (does not force a
+        flush; pending handles return None)."""
+        return self._exc
+
+    def result(self) -> TopologyResult:
+        if not self._done:
+            self._engine.drain()
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+
+@dataclasses.dataclass
+class _Pending:
+    """Book-keeping for one in-flight async request."""
+    handle: TopologyHandle
+    request: TopologyRequest
+    need: set               # roles still expected in the outputs dict
+
+
+class AsyncTopologyEngine(TopologyEngine):
+    """Deadline-aware async front-end over the batched engine.
+
+    `submit()` enqueues and returns a `TopologyHandle`; buckets flush when
+    they fill their pow2 capacity, when `poll()`/`advance()` finds an
+    admission deadline that would otherwise be missed (deadline minus the
+    scheduler's measured per-layout execute estimate), or on `drain()`.
+    Results are bit-identical to sequential `repro.topology.submit`
+    regardless of arrival order, flush timing, retries, or cache evictions.
+
+    clock:  time source for deadlines/latencies — `MonotonicClock` by
+            default, a `VirtualClock` for deterministic tests.
+    charge_execution_time:  advance a virtual clock by the measured wall
+            duration of each execution (virtual-time open-loop benchmarks).
+    result_cache_capacity:  LRU bound on cached idempotency-key results.
+    """
+
+    def __init__(self, min_extent: int = 8, max_batch: int = 64,
+                 cache_capacity: int | None = 64,
+                 slot_cost_cells: int | None = None, clock=None,
+                 default_estimate: float = 0.0,
+                 charge_execution_time: bool = False,
+                 result_cache_capacity: int = 256):
+        super().__init__(min_extent=min_extent, max_batch=max_batch,
+                         cache_capacity=cache_capacity,
+                         slot_cost_cells=slot_cost_cells)
+        self.clock = clock if clock is not None else MonotonicClock()
+        self.scheduler = FlushScheduler(capacity=self.max_batch,
+                                        clock=self.clock,
+                                        default_estimate=default_estimate)
+        self._charge = (bool(charge_execution_time)
+                        and hasattr(self.clock, "advance"))
+        self.result_cache_capacity = int(result_cache_capacity)
+        self._rid = itertools.count()
+        self._pending: dict = {}    # rid -> _Pending
+        self._outputs: dict = {}    # (rid, role) -> (labels, stats)
+        self._inflight: dict = {}   # idempotency key -> pending handle
+        self._results = collections.OrderedDict()  # idem key -> result (LRU)
+        self.latencies: list = []   # per-request latency, clock units
+
+    # --- admission ------------------------------------------------------------
+
+    def submit(self, request: TopologyRequest, deadline: float | None = None,
+               idempotency_key=None) -> TopologyHandle:
+        """Enqueue one request; returns a handle (NOT a result — use
+        `submit_batch` for the synchronous path).  `deadline` is an absolute
+        clock time the request should complete by; `idempotency_key` replays
+        are deduplicated against in-flight requests and a bounded result
+        cache without executing anything."""
+        request.validate()
+        if idempotency_key is not None:
+            cached = self._results.get(idempotency_key)
+            if cached is not None:
+                self.stats.dedup_hits += 1
+                self._results.move_to_end(idempotency_key)
+                h = TopologyHandle(self, request, deadline, idempotency_key)
+                h.submitted_at = h.completed_at = self.clock.now()
+                h._result, h._done = cached, True
+                return h
+            if idempotency_key in self._inflight:
+                self.stats.dedup_hits += 1
+                return self._inflight[idempotency_key]
+
+        rid = next(self._rid)
+        handle = TopologyHandle(self, request, deadline, idempotency_key)
+        handle.submitted_at = self.clock.now()
+        items = self._expand(rid, request)
+        self.stats.requests += 1
+        self.stats.items += len(items)
+        self._pending[rid] = _Pending(handle, request,
+                                      {it.role for it in items})
+        if idempotency_key is not None:
+            self._inflight[idempotency_key] = handle
+        for it in items:
+            self.scheduler.enqueue(self._bucket_key(it), it, deadline)
+        self.stats.queue_depth_peak = max(self.stats.queue_depth_peak,
+                                          self.scheduler.depth())
+        for key in self.scheduler.full():
+            self._flush(key, "capacity")
+        self.poll()
+        return handle
+
+    # --- flush triggers -------------------------------------------------------
+
+    def poll(self) -> int:
+        """Flush every bucket whose earliest deadline would be missed by
+        waiting longer; returns the number of buckets flushed.  Call after
+        time passes (a `VirtualClock` advance, or periodically on a real
+        clock)."""
+        flushed = 0
+        for key in self.scheduler.due():
+            self._flush(key, "deadline")
+            flushed += 1
+        return flushed
+
+    def advance(self, dt: float) -> int:
+        """Virtual-clock convenience: advance time, then poll."""
+        self.clock.advance(dt)
+        return self.poll()
+
+    def drain(self) -> None:
+        """Flush everything queued (end of a burst / shutdown).  Drain is
+        the one flush with a global view, so the cost-model layout merge
+        applies here (capacity/deadline flushes act on single buckets)."""
+        popped = self.scheduler.pop_all()
+        buckets = {k: [e.item for e in v] for k, v in popped.items()}
+        buckets = self._merge_grid_buckets(buckets)
+        for key, group in buckets.items():
+            self._execute_group(key, group, "drain")
+
+    def pending(self) -> int:
+        """Requests admitted but not yet resolved."""
+        return len(self._pending)
+
+    # --- execution with split-retry -------------------------------------------
+
+    def _flush(self, key, reason: str) -> None:
+        group = [e.item for e in self.scheduler.pop(key)]
+        if group:
+            self._execute_group(key, group, reason)
+
+    def _execute_group(self, key, group: list, reason: str) -> None:
+        for lo in range(0, len(group), self.max_batch):
+            self._run_resilient(key, group[lo:lo + self.max_batch], reason)
+        self._settle(group)
+
+    def _run_resilient(self, key, chunk: list, reason: str) -> None:
+        """Run one bucket chunk; on failure retry by splitting in half, so
+        a poisoned request bisects down to a singleton and surfaces its
+        exception on its own handle while every cohort member re-batches
+        and completes."""
+        t0 = self.clock.now()
+        w0 = time.perf_counter()
+        try:
+            self._run_bucket(key, chunk, self._outputs, reason)
+        except Exception as exc:                       # noqa: BLE001
+            if len(chunk) == 1:
+                self._fail(chunk[0], exc)
+                return
+            self.stats.retries += 1
+            half = len(chunk) // 2
+            self._run_resilient(key, chunk[:half], "retry")
+            self._run_resilient(key, chunk[half:], "retry")
+            return
+        if self._charge:
+            self.clock.advance(time.perf_counter() - w0)
+        self.scheduler.observe(key, self.clock.now() - t0)
+
+    # --- completion -----------------------------------------------------------
+
+    def _settle(self, group: list) -> None:
+        """Resolve every request whose outputs are now complete; outputs of
+        already-resolved (failed) requests are dropped."""
+        for rid in sorted({it.req_idx for it in group}):
+            rec = self._pending.get(rid)
+            if rec is None:
+                for it in group:
+                    if it.req_idx == rid:
+                        self._outputs.pop((rid, it.role), None)
+                continue
+            if all((rid, role) in self._outputs for role in rec.need):
+                result = self._assemble(rid, rec.request, self._outputs)
+                for role in rec.need:
+                    del self._outputs[(rid, role)]
+                del self._pending[rid]
+                self._resolve(rec.handle, result)
+
+    def _resolve(self, handle: TopologyHandle, result: TopologyResult):
+        now = self.clock.now()
+        handle._result, handle._done = result, True
+        handle.completed_at = now
+        lat = now - handle.submitted_at
+        self.latencies.append(lat)
+        self.stats.completed += 1
+        self.stats.latency_count += 1
+        self.stats.latency_sum += lat
+        if handle.deadline is not None:
+            if now <= handle.deadline:
+                self.stats.deadline_hits += 1
+            else:
+                self.stats.deadline_misses += 1
+        if handle.idempotency_key is not None:
+            self._inflight.pop(handle.idempotency_key, None)
+            self._results[handle.idempotency_key] = result
+            self._results.move_to_end(handle.idempotency_key)
+            while len(self._results) > self.result_cache_capacity:
+                self._results.popitem(last=False)
+
+    def _fail(self, item: _WorkItem, exc: BaseException) -> None:
+        rec = self._pending.pop(item.req_idx, None)
+        if rec is None or rec.handle._done:
+            return
+        rec.handle._exc, rec.handle._done = exc, True
+        rec.handle.completed_at = self.clock.now()
+        self.stats.failures += 1
+        for role in rec.need:   # drop any sibling outputs already produced
+            self._outputs.pop((item.req_idx, role), None)
+        if rec.handle.idempotency_key is not None:
+            # failures are never cached: a replayed key re-executes
+            self._inflight.pop(rec.handle.idempotency_key, None)

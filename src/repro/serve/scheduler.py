@@ -1,0 +1,164 @@
+"""Deadline-aware flush scheduling for the async serving plane
+(DESIGN.md §Serve-v2).
+
+PR 6's engine flushed on every `submit_batch`, so bucket occupancies were
+whatever one caller happened to hand over and the pow2 batch capacities
+rarely filled.  The `FlushScheduler` decouples *admission* from *execution*:
+work items enqueue into per-bucket FIFO queues and a bucket flushes only
+
+  * when it reaches its batch capacity (the pow2 capacity actually fills),
+  * when the earliest deadline in it would otherwise be missed — `now >=
+    deadline - estimate`, where the estimate is a measured per-layout
+    execute time (EWMA of observed durations, `default_estimate` before the
+    first observation), or
+  * on explicit `drain()` (`pop_all`).
+
+Time is injected, never read from the wall directly: `MonotonicClock` for
+production, `VirtualClock` for tests and benchmarks — a deterministic
+virtual time source the test advances by hand, which makes deadline-flush
+sequences exactly reproducible (the testability deviation recorded in
+DESIGN.md §Serve-v2).  Durations observed through a `VirtualClock` are 0
+unless the engine charges measured wall time back to the clock
+(`charge_execution_time`), so virtual-clock runs degrade gracefully to
+"flush exactly at the deadline".
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+
+class VirtualClock:
+    """Deterministic time source: advances only when told to."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"cannot advance time backwards (dt={dt})")
+        self._t += float(dt)
+        return self._t
+
+
+class MonotonicClock:
+    """Wall time source (monotonic, so deadline arithmetic never jumps)."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One queued work item with its admission metadata."""
+    item: Any
+    deadline: float | None
+    enqueued_at: float
+
+
+class FlushScheduler:
+    """Per-bucket FIFO queues with capacity- and deadline-driven flushes.
+
+    The scheduler only *decides* when a bucket should flush; popping and
+    executing is the engine's job (`AsyncTopologyEngine._flush`), so the
+    decision logic stays a pure function of (queues, clock, estimates) and
+    unit-testable without compiling anything.
+    """
+
+    def __init__(self, capacity: int = 64, clock=None,
+                 default_estimate: float = 0.0, ewma: float = 0.5):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.clock = clock if clock is not None else MonotonicClock()
+        self.default_estimate = float(default_estimate)
+        self.ewma = float(ewma)
+        self._queues: dict = {}       # bucket key -> list[_Entry]
+        self._estimates: dict = {}    # bucket key -> EWMA execute seconds
+
+    # --- admission ------------------------------------------------------------
+
+    def enqueue(self, key, item, deadline: float | None = None) -> int:
+        """Queue one work item under its bucket key; returns the bucket's
+        occupancy after the enqueue."""
+        q = self._queues.setdefault(key, [])
+        q.append(_Entry(item=item,
+                        deadline=None if deadline is None else float(deadline),
+                        enqueued_at=self.clock.now()))
+        return len(q)
+
+    def depth(self) -> int:
+        """Total queued items across every bucket."""
+        return sum(len(q) for q in self._queues.values())
+
+    def depths(self) -> dict:
+        return {k: len(q) for k, q in self._queues.items() if q}
+
+    # --- flush decisions ------------------------------------------------------
+
+    def full(self) -> list:
+        """Bucket keys at (or beyond — a single request can expand past the
+        capacity) their batch capacity."""
+        return [k for k, q in self._queues.items() if len(q) >= self.capacity]
+
+    def earliest_deadline(self, key) -> float | None:
+        ds = [e.deadline for e in self._queues.get(key, ())
+              if e.deadline is not None]
+        return min(ds) if ds else None
+
+    def flush_at(self, key) -> float | None:
+        """Latest time the bucket can still flush without missing its
+        earliest deadline: deadline minus the measured execute estimate."""
+        d = self.earliest_deadline(key)
+        return None if d is None else d - self.estimate(key)
+
+    def due(self) -> list:
+        """Bucket keys whose earliest deadline would be missed by waiting
+        any longer."""
+        now = self.clock.now()
+        out = []
+        for k, q in self._queues.items():
+            if not q:
+                continue
+            t = self.flush_at(k)
+            if t is not None and now >= t:
+                out.append(k)
+        return out
+
+    def next_due_time(self) -> float | None:
+        """Earliest `flush_at` across buckets (a poll-loop wakeup hint)."""
+        times = [t for k in self._queues
+                 if (t := self.flush_at(k)) is not None and self._queues[k]]
+        return min(times) if times else None
+
+    # --- draining -------------------------------------------------------------
+
+    def pop(self, key) -> list:
+        """Remove and return a bucket's queued entries (FIFO order)."""
+        return self._queues.pop(key, [])
+
+    def pop_all(self) -> dict:
+        """Remove and return every non-empty queue (drain)."""
+        out = {k: q for k, q in self._queues.items() if q}
+        self._queues = {}
+        return out
+
+    # --- execute-time estimates ----------------------------------------------
+
+    def observe(self, key, seconds: float) -> None:
+        """Fold one measured bucket-execution duration into the per-layout
+        estimate (EWMA; the first observation replaces the default)."""
+        prev = self._estimates.get(key)
+        self._estimates[key] = (float(seconds) if prev is None else
+                                self.ewma * float(seconds)
+                                + (1.0 - self.ewma) * prev)
+
+    def estimate(self, key) -> float:
+        return self._estimates.get(key, self.default_estimate)
+
+
+__all__ = ["FlushScheduler", "VirtualClock", "MonotonicClock"]

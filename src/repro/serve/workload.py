@@ -8,8 +8,17 @@ extents — the "many small heterogeneous tenants" traffic shape the engine
 buckets.  Every request is a pure function of (seed, index), so repeated
 workloads exercise the executable cache the way real repeated-layout
 traffic does.
+
+Reproducibility contract: `seed` is EXPLICIT (no default — a CI failure
+must name the seed that produced it), and a workload is replayable from a
+`WorkloadTrace` value alone: the trace records every generation parameter
+plus the open-loop arrival/deadline schedule, and `trace.requests()`
+regenerates the identical request list anywhere (`trace.as_dict()` is the
+JSON-safe form for bug reports and bench artifacts).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 import jax.numpy as jnp
@@ -17,17 +26,20 @@ import jax.numpy as jnp
 from ..core.ids import compute_order
 from ..topology import TopologyRequest
 
+_DEFAULT_MIX = (("cc", 0.5), ("ms", 0.2), ("manifold", 0.1),
+                ("threshold_sweep", 0.2))
+
 
 def synthetic_requests(n_requests: int, shapes, mix=None, connectivity=6,
-                       sweep_k: int = 4, seed: int = 0, backend: str = "pure",
+                       sweep_k: int = 4, *, seed: int, backend: str = "pure",
                        mesh=None) -> list:
     """A deterministic list of mixed TopologyRequests.
 
     shapes: tuple of grid extents to rotate through; mix: tuple of
-    (query, weight) over {"cc", "ms", "manifold", "threshold_sweep"}.
+    (query, weight) over {"cc", "ms", "manifold", "threshold_sweep"};
+    seed: required keyword — the single knob that reproduces a workload.
     """
-    mix = mix or (("cc", 0.5), ("ms", 0.2), ("manifold", 0.1),
-                  ("threshold_sweep", 0.2))
+    mix = mix or _DEFAULT_MIX
     queries = [q for q, _ in mix]
     weights = np.asarray([w for _, w in mix], dtype=float)
     weights = weights / weights.sum()
@@ -53,3 +65,77 @@ def synthetic_requests(n_requests: int, shapes, mix=None, connectivity=6,
                 "threshold_sweep", field=jnp.asarray(field),
                 thresholds=jnp.asarray(thr), **common))
     return reqs
+
+
+def open_loop_arrivals(n_requests: int, rate: float, *, seed: int,
+                       deadline_slack: float | None = None) -> tuple:
+    """Open-loop (Poisson) arrival schedule: `n_requests` pairs of
+    (arrival_time, deadline-or-None) with exponential inter-arrivals at
+    `rate` requests per time unit.  Deadlines, when `deadline_slack` is
+    set, are `arrival + U(0.5, 1.5) * deadline_slack` — jittered so a
+    trace mixes tight and loose deadlines.  Deterministic in `seed`
+    (a separate stream from the payload RNG, so arrival timing never
+    perturbs request contents)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0xA11, 1]))
+    t = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    if deadline_slack is None:
+        return tuple((float(ti), None) for ti in t)
+    slack = rng.uniform(0.5, 1.5, size=n_requests) * deadline_slack
+    return tuple((float(ti), float(ti + si)) for ti, si in zip(t, slack))
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadTrace:
+    """A replayable workload: generation parameters + arrival schedule.
+
+    The trace IS the workload — `requests()` regenerates the identical
+    request list from the recorded parameters, and `arrivals` carries the
+    per-request (arrival_time, deadline) pairs (empty for closed-loop
+    traces).  Frozen and JSON-safe so a failing CI run can dump it and a
+    local session can replay it verbatim."""
+    seed: int
+    n_requests: int
+    shapes: tuple
+    mix: tuple = _DEFAULT_MIX
+    connectivity: int = 6
+    sweep_k: int = 4
+    arrivals: tuple = ()     # ((arrival_time, deadline-or-None), ...) or ()
+
+    def requests(self, backend: str = "pure", mesh=None) -> list:
+        return synthetic_requests(
+            self.n_requests, self.shapes, mix=self.mix,
+            connectivity=self.connectivity, sweep_k=self.sweep_k,
+            seed=self.seed, backend=backend, mesh=mesh)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["shapes"] = [list(s) for s in self.shapes]
+        d["mix"] = [[q, w] for q, w in self.mix]
+        d["arrivals"] = [list(a) for a in self.arrivals]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "WorkloadTrace":
+        return cls(seed=int(d["seed"]), n_requests=int(d["n_requests"]),
+                   shapes=tuple(tuple(s) for s in d["shapes"]),
+                   mix=tuple((q, float(w)) for q, w in d["mix"]),
+                   connectivity=int(d["connectivity"]),
+                   sweep_k=int(d["sweep_k"]),
+                   arrivals=tuple(
+                       (float(t), None if dl is None else float(dl))
+                       for t, dl in d["arrivals"]))
+
+
+def synthetic_trace(n_requests: int, shapes, mix=None, connectivity=6,
+                    sweep_k: int = 4, *, seed: int, rate: float | None = None,
+                    deadline_slack: float | None = None) -> WorkloadTrace:
+    """Build a replayable trace; `rate` adds an open-loop arrival schedule
+    (and `deadline_slack` per-request deadlines) for the async plane."""
+    arrivals = (() if rate is None else
+                open_loop_arrivals(n_requests, rate, seed=seed,
+                                   deadline_slack=deadline_slack))
+    return WorkloadTrace(seed=int(seed), n_requests=int(n_requests),
+                         shapes=tuple(tuple(s) for s in shapes),
+                         mix=tuple(mix or _DEFAULT_MIX),
+                         connectivity=int(connectivity),
+                         sweep_k=int(sweep_k), arrivals=arrivals)
