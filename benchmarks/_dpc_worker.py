@@ -7,12 +7,21 @@ so the strong/weak tables expose the surface-to-volume gain of the block
 decomposition (ghost_bytes column).  The requested size is used verbatim —
 an edge length or an exact "XxYxZ" extent; shapes that do not divide a
 layout run the pad-and-mask path (deviation (p) in DESIGN.md) and the
-derived column reports the per-block pad fraction."""
+derived column reports the per-block pad fraction.
+
+Under ``--multihost`` the worker instead joins the real multi-process mesh
+(`jax.distributed.initialize()`, coordinator from the launcher env) and
+runs every layout that fits the global device count."""
 import os
-
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-
 import sys
+
+if "--multihost" in sys.argv:
+    import jax
+    jax.distributed.initialize()
+else:
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
 import time
 
 import numpy as np
@@ -52,7 +61,12 @@ def main():
     mode = sys.argv[1]           # "strong" | "weak"
     base = sys.argv[2]           # grid size (strong) / per-block (weak),
     base_dims = _parse_size(base)  # verbatim — never rounded to divisible
+    ndev = len(jax.devices())
     for layout in SCALING_LAYOUTS:
+        if int(np.prod(layout)) > ndev:
+            print(f"# skipping layout {layout} ({ndev} devices)",
+                  file=sys.stderr)
+            continue
         pads = layout + (1,) * (3 - len(layout))
         if mode == "strong":
             dims = base_dims
@@ -71,6 +85,8 @@ def main():
               f"ghost_bytes={int(stats.ghost_bytes)};"
               f"local_iters={int(stats.local_iters)};"
               f"table_iters={int(stats.table_iters)};"
+              f"table_bytes={int(stats.table_bytes_peak)};"
+              f"exchange_rounds={int(stats.exchange_rounds)};"
               f"pad_frac={float(stats.pad_fraction):.4f}", flush=True)
 
         us, (labels, stats) = timeit(
@@ -79,6 +95,8 @@ def main():
               f"ghost_bytes={int(stats.ghost_bytes)};"
               f"masked_frac={float(stats.masked_ghost_fraction):.4f};"
               f"stitch_rounds={int(stats.stitch_rounds)};"
+              f"table_bytes={int(stats.table_bytes_peak)};"
+              f"exchange_rounds={int(stats.exchange_rounds)};"
               f"pad_frac={float(stats.pad_fraction):.4f}", flush=True)
 
 

@@ -10,13 +10,23 @@ requested size is used verbatim (an edge length or an exact "XxYxZ"
 extent); vertex counts that do not divide a partition count run the padded
 imbalanced-partition path (deviation (p) in DESIGN.md).  The derived
 column carries the cut-table exchange volume (ghost_bytes), the comm-phase
-count (the paper's budget: 1), the resolution iteration counts, and the
-owned-set pad fraction."""
+count (the paper's budget: 1), the resolution iteration counts, the
+per-device table bytes / exchange rounds (DESIGN.md §Table-sharding), and
+the owned-set pad fraction.
+
+Under ``--multihost`` the worker instead joins the real multi-process mesh
+(`jax.distributed.initialize()`, coordinator from the launcher env) and
+runs every partition count that fits the global device count."""
 import os
-
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-
 import sys
+
+if "--multihost" in sys.argv:
+    import jax
+    jax.distributed.initialize()
+else:
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
 import time
 
 import numpy as np
@@ -59,7 +69,12 @@ def main():
     print(f"tab4_graph_cc_single_{edge},{us:.0f},"
           f"edges={senders.size};rounds={int(ref.n_rounds)}", flush=True)
 
+    ndev = len(jax.devices())
     for nparts in SCALING_PARTS:
+        if nparts > ndev:
+            print(f"# skipping {nparts} partitions ({ndev} devices)",
+                  file=sys.stderr)
+            continue
         # no divisibility skip: a non-dividing count pads the owned sets
         dec = GraphDecomp(n, senders, receivers, nparts)
         mesh = make_dpc_mesh(nparts)
@@ -72,6 +87,8 @@ def main():
               f"comm_phases={int(stats.comm_phases)};"
               f"table_iters={int(stats.table_iters)};"
               f"stitch_rounds={int(stats.stitch_rounds)};"
+              f"table_bytes={int(stats.table_bytes_peak)};"
+              f"exchange_rounds={int(stats.exchange_rounds)};"
               f"pad_frac={float(stats.pad_fraction):.4f}", flush=True)
 
 

@@ -1,0 +1,102 @@
+"""Worker for the table-scaling benchmark (deviation (s), DESIGN.md
+§Table-sharding): replicated vs sharded boundary table at growing block
+lattices, on 8 fake host devices in a subprocess (or the real multi-process
+device set under ``--multihost``).  Prints CSV rows
+``name,us_per_call,derived`` and writes ``BENCH_table.json`` with the
+machine-comparable balance sheet: per-device table bytes, outer exchange
+rounds and wall time for every (layout, kind, mode) cell — the artifact CI
+archives so the memory/latency trade is tracked across runs."""
+import os
+import sys
+
+if "--multihost" in sys.argv:
+    # real multi-process mesh: the launcher provides coordinator env vars
+    # (JAX_COORDINATOR_ADDRESS / process ids); never fake devices here
+    import jax
+    jax.distributed.initialize()
+else:
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import compute_order, make_dpc_mesh
+from repro.core.distributed import (distributed_manifold,
+                                    distributed_connected_components)
+from repro.data import perlin_noise
+
+from _dpc_worker import _parse_size  # shared "edge or XxYxZ" spec parsing
+
+# one grid, growing block lattice: the replicated table is the SAME size in
+# every cell, so the per-device byte column isolates the sharding win
+_LAYOUTS = ((2,), (2, 2), (2, 2, 2))
+
+
+def timeit(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def main():
+    size = sys.argv[1]           # edge length or exact "XxYxZ" — verbatim
+    dims = _parse_size(size)
+    ndev = len(jax.devices())
+    field = perlin_noise(dims, frequency=0.1, seed=0)
+    order = compute_order(jnp.asarray(field))
+    mask = jnp.asarray(field > np.quantile(field, 0.9))
+
+    rows = []
+    for layout in _LAYOUTS:
+        if int(np.prod(layout)) > ndev:
+            print(f"# table_scaling: skipping layout {layout} "
+                  f"({ndev} devices)", file=sys.stderr)
+            continue
+        mesh = make_dpc_mesh(layout)
+        tag = "x".join(map(str, layout))
+        ref = {}
+        for kind, fn, arg in (
+                ("seg", distributed_manifold, order),
+                ("cc", distributed_connected_components, mask)):
+            for mode in ("replicated", "sharded"):
+                us, (labels, stats) = timeit(
+                    lambda a: fn(a, mesh, 6, table_mode=mode), arg)
+                if mode == "replicated":
+                    ref[kind] = np.asarray(labels)
+                else:  # the bench is only meaningful if the modes agree
+                    assert (np.asarray(labels) == ref[kind]).all(), \
+                        (layout, kind)
+                row = {"layout": tag, "kind": kind, "mode": mode,
+                       "us_per_call": round(us),
+                       "table_bytes_per_device": int(stats.table_bytes_peak),
+                       "exchange_rounds": int(stats.exchange_rounds),
+                       "comm_phases": int(stats.comm_phases),
+                       "converged": int(stats.converged)}
+                rows.append(row)
+                print(f"table_scaling_{kind}_{mode}_{size}_{tag}blocks,"
+                      f"{us:.0f},"
+                      f"table_bytes={row['table_bytes_per_device']};"
+                      f"exchange_rounds={row['exchange_rounds']};"
+                      f"comm_phases={row['comm_phases']}", flush=True)
+
+    out = os.path.join(os.getcwd(), "BENCH_table.json")
+    with open(out, "w") as f:
+        json.dump({"size": size, "n_devices": ndev, "rows": rows}, f,
+                  indent=2)
+        f.write("\n")
+    print(f"# wrote {out} ({len(rows)} rows)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

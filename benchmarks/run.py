@@ -47,52 +47,61 @@ def _emit(name, us, derived=""):
     print(f"{name},{us:.0f},{derived}", flush=True)
 
 
-def tab1_strong_scaling(base="96"):
+def _run_scaling_worker(worker_file, argv, *, multihost=False, name=""):
+    """Spawn a scaling worker.  Default: 8 fake host devices (the CI
+    single-host stand-in).  `multihost=True` instead hands the worker the
+    REAL multi-process device set: the worker calls
+    `jax.distributed.initialize()` (coordinator address / process ids come
+    from the launcher env, e.g. srun or the JobSet controller) and layouts
+    span the global device count — the path the paper's >= 64-rank tables
+    need."""
+    env = dict(os.environ)
+    if not multihost:
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    worker = os.path.join(os.path.dirname(__file__), worker_file)
+    cmd = [sys.executable, worker] + [str(a) for a in argv]
+    if multihost:
+        cmd.append("--multihost")
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=3600)
+    sys.stdout.write(proc.stdout)
+    if proc.returncode:
+        sys.stderr.write(proc.stderr)
+        raise RuntimeError(f"{name or worker_file} worker failed")
+
+
+def tab1_strong_scaling(base="96", multihost=False):
     """base: edge length or an exact "XxYxZ" size (e.g. 97x61x43) — passed
     through verbatim; non-divisible shapes run the pad-and-mask path and the
     report carries the per-block pad fraction."""
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8")
-    worker = os.path.join(os.path.dirname(__file__), "_dpc_worker.py")
-    proc = subprocess.run([sys.executable, worker, "strong", str(base)],
-                          env=env, capture_output=True, text=True,
-                          timeout=3600)
-    sys.stdout.write(proc.stdout)
-    if proc.returncode:
-        sys.stderr.write(proc.stderr)
-        raise RuntimeError("strong-scaling worker failed")
+    _run_scaling_worker("_dpc_worker.py", ["strong", base],
+                        multihost=multihost, name="strong-scaling")
 
 
-def tab2_weak_scaling(base="48"):
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8")
-    worker = os.path.join(os.path.dirname(__file__), "_dpc_worker.py")
-    proc = subprocess.run([sys.executable, worker, "weak", str(base)],
-                          env=env, capture_output=True, text=True,
-                          timeout=3600)
-    sys.stdout.write(proc.stdout)
-    if proc.returncode:
-        sys.stderr.write(proc.stderr)
-        raise RuntimeError("weak-scaling worker failed")
+def tab2_weak_scaling(base="48", multihost=False):
+    _run_scaling_worker("_dpc_worker.py", ["weak", base],
+                        multihost=multihost, name="weak-scaling")
 
 
-def tab4_graph_cc_scaling(edge="24"):
+def tab4_graph_cc_scaling(edge="24", multihost=False):
     """Unstructured CC strong scaling (paper §5, the graph path): vertex
     partitions {1, 2, 4, 8} of a synthetic tet-mesh edge list vs the
     single-device oracle; derived columns expose the one-phase cut-table
     exchange (ghost_bytes / comm_phases) and the owned-set pad fraction.
     edge: grid edge length or an exact "XxYxZ" size; counts that do not
     divide the partition count run the padded (imbalanced) path."""
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8")
-    worker = os.path.join(os.path.dirname(__file__), "_graph_cc_worker.py")
-    proc = subprocess.run([sys.executable, worker, str(edge)],
-                          env=env, capture_output=True, text=True,
-                          timeout=3600)
-    sys.stdout.write(proc.stdout)
-    if proc.returncode:
-        sys.stderr.write(proc.stderr)
-        raise RuntimeError("graph-CC scaling worker failed")
+    _run_scaling_worker("_graph_cc_worker.py", [edge],
+                        multihost=multihost, name="graph-CC scaling")
+
+
+def table_scaling(size="24", multihost=False):
+    """Replicated vs sharded boundary table (DESIGN.md §Table-sharding):
+    one grid across block lattices (2,) / (2, 2) / (2, 2, 2), manifold and
+    CC, both table modes — the derived columns carry per-device table bytes
+    and outer exchange rounds, and the worker writes BENCH_table.json (the
+    artifact CI archives).  size: edge length or exact "XxYxZ", verbatim."""
+    _run_scaling_worker("_table_worker.py", [size],
+                        multihost=multihost, name="table-scaling")
 
 
 def tab3_threshold(edge: int = 96):
@@ -417,22 +426,31 @@ _BENCHES = {
     "tab2_weak_scaling": (tab2_weak_scaling, {"base": 32}, {"base": 8}),
     "tab4_graph_cc_scaling": (tab4_graph_cc_scaling, {"edge": 24},
                               {"edge": 7}),
+    "table_scaling": (table_scaling, {"size": 48}, {"size": 13}),
 }
 
 # benches that accept an exact user size via --size= (passed through
 # verbatim — sizes are never rounded to divisible shapes)
 _SIZED = {"tab1_strong_scaling": "base", "tab2_weak_scaling": "base",
-          "tab4_graph_cc_scaling": "edge"}
+          "tab4_graph_cc_scaling": "edge", "table_scaling": "size"}
+
+# subprocess scaling benches that can run on a real multi-process mesh
+_MULTIHOST = {"tab1_strong_scaling", "tab2_weak_scaling",
+              "tab4_graph_cc_scaling", "table_scaling"}
 
 
 def main(argv=None) -> None:
-    """Usage: run.py [--tiny] [--size=XxYxZ] [bench ...] — no names runs
-    everything.  --size passes the user's exact size through to the scaling
-    benches (any extent: non-divisible shapes take the padded path and the
-    report prints the pad fraction per block).  Output is CSV on stdout (CI
-    redirects it into an artifact)."""
+    """Usage: run.py [--tiny] [--size=XxYxZ] [--multihost] [bench ...] — no
+    names runs everything.  --size passes the user's exact size through to
+    the scaling benches (any extent: non-divisible shapes take the padded
+    path and the report prints the pad fraction per block).  --multihost
+    runs the subprocess scaling benches on the real multi-process device
+    set via `jax.distributed.initialize()` (launcher env provides the
+    coordinator) instead of 8 fake host devices.  Output is CSV on stdout
+    (CI redirects it into an artifact)."""
     argv = sys.argv[1:] if argv is None else argv
     tiny = "--tiny" in argv
+    multihost = "--multihost" in argv
     size = None
     arrival = "closed"
     for a in argv:
@@ -443,12 +461,18 @@ def main(argv=None) -> None:
     if arrival not in ("closed", "open"):
         sys.exit(f"--arrival must be closed or open, got {arrival!r}")
     names = [a for a in argv if not a.startswith("-")]
-    bad_flags = [a for a in argv if a.startswith("-") and a != "--tiny"
+    bad_flags = [a for a in argv
+                 if a.startswith("-") and a not in ("--tiny", "--multihost")
                  and not a.startswith("--size=")
                  and not a.startswith("--arrival=")]
     if bad_flags:
-        sys.exit(f"unknown flag(s) {bad_flags}; "
-                 "flags are --tiny, --size=XxYxZ and --arrival=closed|open")
+        sys.exit(f"unknown flag(s) {bad_flags}; flags are --tiny, "
+                 "--size=XxYxZ, --arrival=closed|open and --multihost")
+    if multihost:
+        non_mh = [n for n in (names or list(_BENCHES)) if n not in _MULTIHOST]
+        if non_mh:
+            sys.exit(f"--multihost only applies to {sorted(_MULTIHOST)}; "
+                     f"drop {non_mh} or run them separately")
     unknown = [n for n in names if n not in _BENCHES]
     if unknown:
         sys.exit(f"unknown benchmark(s) {unknown}; "
@@ -461,6 +485,8 @@ def main(argv=None) -> None:
             kw[_SIZED[n]] = size
         if n == "serve_throughput":
             kw["arrival"] = arrival
+        if n in _MULTIHOST:
+            kw["multihost"] = multihost
         fn(**kw)
     # kernel-facing rows also land in a JSON artifact (BENCH_kernels.json):
     # the fused-vs-unfused round counts are the acceptance numbers of the

@@ -24,6 +24,9 @@ class ServeTopologyConfig:
     # synthetic workload mix (query, weight) for benchmarks / demos
     mix: tuple = (("cc", 0.5), ("ms", 0.2), ("manifold", 0.1),
                   ("threshold_sweep", 0.2))
+    table_mode: str = "replicated"  # boundary-table layout for distributed
+                                    # requests ("sharded" = deviation (s))
+    table_max_iter: int = 64
     # request extents: prime / non-divisible on purpose (bucketing path)
     shapes: tuple = ((96, 96, 96), (97, 61, 43), (64, 96, 48), (101, 53, 37))
     sweep_k: int = 4           # thresholds per sweep request

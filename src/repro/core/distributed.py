@@ -51,7 +51,7 @@ already-gathered table.
 from __future__ import annotations
 
 import math
-from functools import partial
+from functools import cached_property, lru_cache, partial
 
 import numpy as np
 import jax
@@ -60,8 +60,9 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ._shardmap import shard_map_norep
-from ._table import (pointer_chase, make_group_max, hook_propagate,
-                     value_substitute)
+from ._table import (TableView, chase_view, check_converged, check_table_mode,
+                     make_group_max, hook_propagate, pointer_chase,
+                     sharded_fixpoint, value_substitute)
 from .stats import DPCStats
 from .steepest import neighbor_offsets, shift_fill
 from .pathcompress import path_compress
@@ -214,10 +215,35 @@ class BlockDecomp:
             is_b = is_b | on
         return is_b, pos
 
+    # incremented on every boundary_coords build; the recompile-regression
+    # test pins this to one build per decomposition (PR 9 satellite)
+    _coords_builds = 0
+
+    @cached_property
+    def boundary_coords(self) -> np.ndarray:
+        """(table_size, ndim) int32 global coordinates of every table slot,
+        built ONCE per decomposition on the host and passed into the mapped
+        programs as a replicated *argument* — an input buffer, not an
+        in-graph iota cascade that XLA would constant-fold (rebake) into
+        every executable that needs it."""
+        BlockDecomp._coords_builds += 1
+        return np.asarray(self.slot_coords(np), dtype=np.int32)
+
+    @cached_property
+    def boundary_coords_dev(self):
+        """`boundary_coords` as a device array (uploaded once per decomp).
+        The upload must stay concrete even when the first access happens
+        inside someone else's trace (the serve engine jits the batch entry
+        points) — caching a staged constant here would leak a tracer into
+        every later caller."""
+        with jax.ensure_compile_time_eval():
+            return jnp.asarray(self.boundary_coords)
+
     def slot_coords(self, xp=jnp):
         """(table_size, ndim) global coordinates of every table slot.
-        Traced by default: materialising this as a host-side constant would
-        bake O(table_size * ndim) bytes into every executable."""
+        Prefer the cached `boundary_coords` host array: tracing this with
+        xp=jnp bakes the O(table_size * ndim) constant into every
+        executable."""
         parts = []
         for a in range(self.k):
             F = self.face_size[a]
@@ -239,10 +265,21 @@ class BlockDecomp:
         return xp.concatenate(parts, axis=0)
 
 
+@lru_cache(maxsize=128)
+def _decomp_cached(grid, layout, names) -> BlockDecomp:
+    return BlockDecomp(grid, layout, names)
+
+
 def _decomp_for(mesh: Mesh, grid_shape) -> BlockDecomp:
+    """Memoized per (grid, layout): repeated calls on the same geometry
+    share one BlockDecomp, so `boundary_coords` (and the sharded-stack
+    geometry) are built once, not per request."""
     names = tuple(mesh.axis_names)
     layout = tuple(mesh.shape[n] for n in names)
-    return BlockDecomp(grid_shape, layout, names)
+    return _decomp_cached(tuple(int(x) for x in grid_shape), layout, names)
+
+
+_check_table_mode = check_table_mode  # shared with the graph backend
 
 
 # --- shared traced helpers ---------------------------------------------------
@@ -332,25 +369,262 @@ def _gather_table(owned, dec: BlockDecomp):
     return jnp.concatenate(parts)
 
 
+def _own_faces(owned, dec: BlockDecomp):
+    """This device's own row-chunk of the boundary table: the block's lo/hi
+    face along each decomposed axis, flattened exactly like one block's
+    segment of the gathered table (`row = local_face_offset[a] + j*F_a + r`).
+    `_gather_table` == all_gather of every block's `_own_faces`."""
+    parts = []
+    for a in range(dec.k):
+        lo = lax.index_in_dim(owned, 0, a, keepdims=False)
+        hi = lax.index_in_dim(owned, dec.local[a] - 1, a, keepdims=False)
+        parts.append(jnp.stack([lo.reshape(-1), hi.reshape(-1)]).reshape(-1))
+    return jnp.concatenate(parts)
+
+
 def _table_compress(T, dec: BlockDecomp, max_iter=64):
     """Pointer doubling on the gathered flat table (Alg. 2 lines 15-25).
     Entries < 0 (unmasked CC cells and the pad sentinels of deviation (p))
     and non-boundary targets are fixed.  The slot lookup is pure coordinate
     arithmetic (boundary_pos); the chase itself is the shared
-    backend-agnostic loop in core/_table.py."""
+    backend-agnostic loop in core/_table.py.  Returns (table, iters, ok)."""
     def lookup(t):
         is_b, pos = dec.boundary_pos(jnp.clip(t, 0), jnp)
         tv = t[jnp.clip(pos, 0, t.size - 1)]
         return jnp.where((t >= 0) & is_b, tv, t)
 
-    return pointer_chase(T, lookup, max_iter)
+    view, iters, ok = chase_view(TableView(T, lookup, T.size), max_iter)
+    return view.values, iters, ok
+
+
+# --- sharded boundary table (table_mode="sharded", deviation (s)) ------------
+
+
+class _ShardGeom:
+    """Static geometry of the sharded boundary-table stack (deviation (s) in
+    DESIGN.md §Table-sharding).
+
+    Per device the stack is `n_chunks` copies of the per-block face-row
+    layout (`rows` = both faces of every decomposed axis, `_own_faces`
+    order): chunk 0 is the device's OWN faces, the rest a one-hop halo of
+    lattice-neighbor blocks.  Axes with layout 1 contribute no halo; layout
+    2 contributes ONE chunk (the swap partner is both the +1 and the -1
+    neighbor); layout >= 3 contributes lo/hi chunks, with lattice-edge
+    positions filled by inert sentinels (label -1 / mask False, the
+    deviation-(p) contract).  When the stencil reaches no diagonal block
+    pair (e.g. connectivity 6 on a 3-D lattice) the chunk set is the
+    von-Neumann star (1 + sum(sz-1) chunks); otherwise the full Moore
+    product (prod(sz)) is built by dimension-ordered forwarding, exactly
+    like the ghost halo itself.
+    """
+
+    def __init__(self, dec: BlockDecomp, connectivity: int):
+        self.dec = dec
+        self.rows = dec.table_size // dec.nblocks
+        self.local_off = [dec.face_offset[a] // dec.nblocks
+                          for a in range(dec.k)]
+        self.act = [a for a in range(dec.k) if dec.layout[a] > 1]
+        self.sz = {a: (2 if dec.layout[a] == 2 else 3) for a in self.act}
+        offs = neighbor_offsets(dec.ndim, connectivity)
+        self.moore = any(
+            sum(1 for a in self.act if off[a] != 0) >= 2 for off in offs)
+        if self.moore:
+            self.n_chunks = math.prod(self.sz[a] for a in self.act)
+        else:
+            self.n_chunks, self.vn_base = 1, {}
+            for a in self.act:
+                self.vn_base[a] = self.n_chunks
+                self.n_chunks += self.sz[a] - 1
+        self.stack_size = self.n_chunks * self.rows
+
+    def exchange_fn(self, fill):
+        """One halo-exchange round: own chunk -> flat (stack_size,) stack
+        with the own chunk leading (`sharded_fixpoint` contract).  The Moore
+        variant forwards the partial stack axis-by-axis so diagonal-neighbor
+        chunks arrive via two axis hops (`_halo_extend`'s argument)."""
+        dec = self.dec
+
+        def axis_parts(src, a):
+            L, name = dec.layout[a], dec.names[a]
+            if L == 2:
+                return [lax.ppermute(src, name, [(0, 1), (1, 0)])]
+            lo = lax.ppermute(src, name, [(i, i + 1) for i in range(L - 1)])
+            hi = lax.ppermute(src, name, [(i + 1, i) for i in range(L - 1)])
+            p = lax.axis_index(name)
+            return [jnp.where(p == 0, fill, lo),
+                    jnp.where(p == L - 1, fill, hi)]
+
+        if self.moore:
+            def exchange(own):
+                S, dims = own, 0
+                for a in self.act:
+                    S = jnp.stack([S] + axis_parts(S, a), axis=dims)
+                    dims += 1
+                return S.reshape(-1)
+        else:
+            def exchange(own):
+                chunks = [own]
+                for a in self.act:
+                    chunks.extend(axis_parts(own, a))
+                return jnp.concatenate(chunks) if len(chunks) > 1 else own
+        return exchange
+
+    def pos_to_stack(self, s):
+        """Global table slot -> (in_stack, flat stack index).  Callers gate
+        on `is_boundary` (and validity) before trusting either output."""
+        dec = self.dec
+        row = jnp.zeros_like(s)
+        B = jnp.zeros_like(s)
+        for a in range(dec.k):
+            F2 = 2 * dec.face_size[a]
+            off = dec.face_offset[a]
+            within = (s >= off) & (s < off + dec.nblocks * F2)
+            t = jnp.where(within, s - off, 0)
+            row = jnp.where(within, self.local_off[a] + t % F2, row)
+            B = jnp.where(within, t // F2, B)
+        row = row.astype(jnp.int32)
+        B = B.astype(jnp.int32)
+        ok = jnp.ones_like(row, dtype=bool)
+        chunk = jnp.zeros_like(row)
+        nnz = jnp.zeros_like(row)
+        pos = {}
+        for a in self.act:
+            c = (B // dec.bstride[a]) % dec.layout[a]
+            d = c - lax.axis_index(dec.names[a])
+            if dec.layout[a] == 2:
+                pa = (d != 0).astype(jnp.int32)
+            else:
+                ok = ok & (jnp.abs(d) <= 1)
+                pa = jnp.where(d == 0, 0, jnp.where(d == -1, 1, 2))
+            pos[a] = pa
+            nnz = nnz + (pa > 0)
+        if self.moore:
+            for a in self.act:
+                chunk = chunk * self.sz[a] + pos[a]
+        else:
+            ok = ok & (nnz <= 1)
+            for a in self.act:
+                chunk = chunk + jnp.where(pos[a] > 0,
+                                          self.vn_base[a] + pos[a] - 1, 0)
+        return ok, chunk * self.rows + row
+
+    def lookup_fn(self):
+        """Value lookup through the stack (the sharded TableView lookup):
+        in-stack boundary targets map through, everything else is fixed."""
+        dec, size = self.dec, self.stack_size
+
+        def lookup(t):
+            is_b, s = dec.boundary_pos(jnp.clip(t, 0), jnp)
+            ok, idx = self.pos_to_stack(s)
+            tv = t[jnp.clip(idx, 0, size - 1)]
+            return jnp.where((t >= 0) & is_b & ok, tv, t)
+        return lookup
+
+    def _chunk_block_coords(self, ci: int):
+        """Traced per-axis block coordinates of (static) chunk `ci`."""
+        dec = self.dec
+        pos = {a: 0 for a in range(dec.k)}
+        if self.moore:
+            rest = ci
+            for a in reversed(self.act):
+                pos[a] = rest % self.sz[a]
+                rest //= self.sz[a]
+        else:
+            for a in self.act:
+                if self.vn_base[a] <= ci < self.vn_base[a] + self.sz[a] - 1:
+                    pos[a] = ci - self.vn_base[a] + 1
+        bc = []
+        for a in range(dec.k):
+            p = lax.axis_index(dec.names[a])
+            if pos[a] == 0:
+                bc.append(p)
+            elif dec.layout[a] == 2:
+                bc.append(1 - p)            # the swap partner
+            else:
+                bc.append(p - 1 if pos[a] == 1 else p + 1)
+        return bc
+
+    def stack_coords(self, coords):
+        """(stack_size, ndim) global coordinates of every stack slot plus a
+        per-slot validity mask (False on lattice-edge fill chunks).  Rows are
+        gathered per chunk from the cached `boundary_coords` table — passed
+        in as a traced argument, never baked."""
+        dec = self.dec
+        r_i = jnp.arange(self.rows, dtype=jnp.int32)
+        parts, valids = [], []
+        for ci in range(self.n_chunks):
+            bc = self._chunk_block_coords(ci)
+            valid, B = None, jnp.int32(0)
+            for a in range(dec.k):
+                v = (bc[a] >= 0) & (bc[a] < dec.layout[a])
+                valid = v if valid is None else valid & v
+                B = B + jnp.clip(bc[a], 0, dec.layout[a] - 1) * dec.bstride[a]
+            gidx = jnp.zeros_like(r_i)
+            for a in range(dec.k):
+                lo = self.local_off[a]
+                F2 = 2 * dec.face_size[a]
+                within = (r_i >= lo) & (r_i < lo + F2)
+                gidx = jnp.where(
+                    within, dec.face_offset[a] + B * F2 + (r_i - lo), gidx)
+            parts.append(coords[gidx])
+            valids.append(jnp.broadcast_to(valid, (self.rows,)))
+        return jnp.concatenate(parts), jnp.concatenate(valids)
+
+
+def _shard_geom_for(dec: BlockDecomp, connectivity: int) -> _ShardGeom:
+    cache = dec.__dict__.setdefault("_shard_geoms", {})
+    key = int(connectivity)
+    if key not in cache:
+        cache[key] = _ShardGeom(dec, connectivity)
+    return cache[key]
+
+
+def _preduce_stats(dec: BlockDecomp, iters, rounds, ok):
+    """Mesh-wide reductions of per-device sharded fixpoint stats."""
+    return (lax.pmax(iters, dec.names), rounds,
+            lax.pmin(ok.astype(jnp.int32), dec.names))
 
 
 # --- MS manifolds ------------------------------------------------------------
 
 
+def _sharded_manifold_resolve(owned, dec: BlockDecomp, connectivity,
+                              max_iter: int):
+    """Sharded replacement of steps 4-6 (gather + compress + substitute)
+    for manifolds: a neighbor-relay fixpoint on the own+halo stack.  Each
+    outer round rebuilds the view from fresh estimates and re-chases every
+    own slot from its ORIGINAL one-hop pointer through the view (in-view
+    segments compress by pointer doubling within the round; the estimate a
+    chain adopts at its deepest in-view slot is that neighbor's previous
+    round's reach).  Converges to the chains' unique terminals — the exact
+    values the replicated chase produces (DESIGN.md §Table-sharding)."""
+    geom = _shard_geom_for(dec, connectivity)
+    T0 = _own_faces(owned, dec)
+    lookup = geom.lookup_fn()
+    exchange = geom.exchange_fn(-1)
+
+    def refine(stack):
+        view = TableView(stack.at[:geom.rows].set(T0), lookup, geom.rows)
+        view, iters, ok = chase_view(view, max_iter)
+        return view.values, iters, ok
+
+    def reduce_any(x):
+        return lax.pmax(x.astype(jnp.int32), dec.names) > 0
+
+    stackT, _, rounds, iters, ok = sharded_fixpoint(
+        T0, exchange, refine, reduce_any, max_rounds=max_iter)
+
+    o = owned.ravel()
+    is_b, s = dec.boundary_pos(jnp.clip(o, 0), jnp)
+    okp, idx = geom.pos_to_stack(s)
+    final = jnp.where((o >= 0) & is_b & okp,
+                      stackT[jnp.clip(idx, 0, geom.stack_size - 1)], o)
+    return final, geom, rounds, iters, ok
+
+
 def _manifold_block(order_blk, *, dec: BlockDecomp, connectivity,
-                    fused_impl: str = "auto"):
+                    fused_impl: str = "auto", table_mode: str = "replicated",
+                    table_max_iter: int = 64):
     """Always runs the *descending* direction; the ascending manifold is
     obtained by flipping the order field outside (keeps the -1 halo fill
     strictly below every candidate)."""
@@ -381,56 +655,85 @@ def _manifold_block(order_blk, *, dec: BlockDecomp, connectivity,
     owned = _gid_map(dec).ravel()[d].reshape(dec.ext)[dec.owned_slices]
     if dec.ragged:
         owned = jnp.where(_owned_valid(dec), owned, dec.id_dtype(-1))
-    T = _gather_table(owned, dec)
+    isz = np.dtype(dec.id_dtype).itemsize
 
-    # 5. ghost-table compression (identical on every device)
-    T, table_iters = _table_compress(T, dec)
+    if table_mode == "replicated":
+        # 4. the single communication phase (Alg. 2) + 5. ghost-table
+        #    compression (identical on every device)
+        T = _gather_table(owned, dec)
+        T, table_iters, chase_ok = _table_compress(T, dec, table_max_iter)
 
-    # 6. final substitution (Alg. 2 lines 27-33)
-    o = owned.ravel()
-    is_b, pos = dec.boundary_pos(jnp.clip(o, 0), jnp)
-    final = jnp.where((o >= 0) & is_b,
-                      T[jnp.clip(pos, 0, T.size - 1)], o)
+        # 6. final substitution (Alg. 2 lines 27-33)
+        o = owned.ravel()
+        is_b, pos = dec.boundary_pos(jnp.clip(o, 0), jnp)
+        final = jnp.where((o >= 0) & is_b,
+                          T[jnp.clip(pos, 0, T.size - 1)], o)
+        comm = jnp.int32(1)
+        exch_rounds = jnp.int32(0)
+        ghost_bytes = jnp.float32(dec.n_valid_slots * isz)
+        table_bytes = jnp.float32(dec.table_size * isz)
+        converged = chase_ok.astype(jnp.int32)
+    else:
+        # 4-6. sharded: own faces + one-hop halo, neighbor-relay fixpoint
+        final, geom, exch_rounds, iters, ok = _sharded_manifold_resolve(
+            owned, dec, connectivity, table_max_iter)
+        table_iters, _, converged = _preduce_stats(dec, iters, exch_rounds,
+                                                   ok)
+        comm = exch_rounds                 # one exchange phase per round
+        halo = geom.stack_size - geom.rows
+        ghost_bytes = jnp.float32(halo * isz) * exch_rounds.astype(
+            jnp.float32)
+        table_bytes = jnp.float32((geom.stack_size + geom.rows) * isz)
 
     li = lax.pmax(local_iters, dec.names)
     kr = lax.pmax(kernel_rounds, dec.names)
     stats = DPCStats(
         local_iters=li,
-        table_iters=table_iters,  # identical on all devices (same table)
+        table_iters=table_iters,
         stitch_rounds=jnp.int32(0),
-        ghost_bytes=jnp.float32(dec.n_valid_slots * T.dtype.itemsize),
+        ghost_bytes=ghost_bytes,
         masked_ghost_fraction=jnp.float32(1.0),
         pad_fraction=jnp.float32(dec.pad_fraction),
-        comm_phases=jnp.int32(1),
+        comm_phases=comm,
         kernel_rounds=kr,
         # the unfused local loop needs >= kr rounds to resolve the same
         # in-tile chains, the fused one used li — a provable lower bound
         global_iters_saved=jnp.maximum(kr - li, 0),
+        table_bytes_peak=table_bytes,
+        exchange_rounds=exch_rounds,
+        converged=converged,
     )
     return final.reshape(order_blk.shape), stats
 
 
 def distributed_manifold(order, mesh: Mesh, connectivity: int = 6,
-                         descending: bool = True, fused_impl: str = "auto"):
+                         descending: bool = True, fused_impl: str = "auto",
+                         table_mode: str = "replicated",
+                         table_max_iter: int = 64):
     """Descending (or ascending) manifold of a block-sharded order field.
 
     order: int array of ANY extent (mesh axis a decomposes grid axis a;
     non-divisible extents are padded with inert sentinels, deviation (p) in
     DESIGN.md).  Returns the label grid (same extent as `order`) and
     replicated DPCStats.  fused_impl selects the block-local phase
-    implementation (repro.kernels.ops.fused_local_phase); labels are
-    bit-identical across choices.
+    implementation (repro.kernels.ops.fused_local_phase); table_mode picks
+    the boundary-table layout — "replicated" (one all_gather) or "sharded"
+    (own faces + one-hop halo, outer exchange rounds; deviation (s)); labels
+    are bit-identical across all choices.
     """
+    _check_table_mode(table_mode)
     dec = _decomp_for(mesh, order.shape)
     if not descending:
         order = order.size - 1 - order  # ascending = descending on flipped order
     order = _pad_input(order, dec, -1)  # -1: below every real order value
     fn = partial(_manifold_block, dec=dec, connectivity=connectivity,
-                 fused_impl=fused_impl)
+                 fused_impl=fused_impl, table_mode=table_mode,
+                 table_max_iter=table_max_iter)
     spec = P(*dec.names, *([None] * (order.ndim - dec.k)))
     mapped = shard_map_norep(fn, mesh, (spec,),
                              (spec, DPCStats(*([P()] * _N_STATS))))
     labels, stats = mapped(order)
+    check_converged(stats.converged, "distributed_manifold", table_max_iter)
     return _unpad_output(labels, dec), stats
 
 
@@ -472,7 +775,7 @@ def _cc_local_fixpoint(d, mask_ext, connectivity, max_rounds=64):
     return d, rounds, its, it0
 
 
-def _table_propagate(Tstar, Mflat, dec: BlockDecomp, connectivity,
+def _table_propagate(Tstar, Mflat, coords, dec: BlockDecomp, connectivity,
                      max_iter=64):
     """Hook + propagate on the gathered flat table: fixpoint of
       (a) max across masked stencil edges between boundary vertices (slot
@@ -483,11 +786,12 @@ def _table_propagate(Tstar, Mflat, dec: BlockDecomp, connectivity,
     component.  Deviation (d2): the paper's path compression alone cannot
     perform these merges.  The group machinery and the fixpoint loop are
     shared with the unstructured backend (core/_table.py); only `cut_max`
-    — slot adjacency by coordinate arithmetic — is block-specific."""
+    — slot adjacency by coordinate arithmetic — is block-specific.
+    `coords` is the cached (table_size, ndim) slot-coordinate table, passed
+    in as a traced argument (see BlockDecomp.boundary_coords)."""
     msize = Tstar.size
     group_max, perm, sorted_vals = make_group_max(Tstar)
 
-    coords = dec.slot_coords()
     grid = jnp.asarray(dec.grid, dtype=jnp.int32)
     stride = jnp.asarray(dec.stride, dtype=dec.id_dtype)
     offsets = neighbor_offsets(dec.ndim, connectivity)
@@ -507,15 +811,88 @@ def _table_propagate(Tstar, Mflat, dec: BlockDecomp, connectivity,
             best = jnp.where(Mflat & nm, jnp.maximum(best, nl), best)
         return best
 
-    L, iters = hook_propagate(Tstar, cut_max, group_max, max_iter)
-    return L, (perm, sorted_vals), iters
+    L, iters, ok = hook_propagate(Tstar, cut_max, group_max, max_iter)
+    return L, (perm, sorted_vals), iters, ok
 
 
-def _cc_block(mask_blk, *, dec: BlockDecomp, connectivity,
-              gather_mask: bool = True, fused_impl: str = "auto"):
+def _sharded_cc_resolve(owned, mask_owned, coords, dec: BlockDecomp,
+                        connectivity, gather_mask: bool, max_iter: int):
+    """Sharded replacement of CC steps 4-6: a max-flooding fixpoint on the
+    own+halo stack.  No chase stage is needed — the flood relation (masked
+    stencil cut edges between in-stack slots + equal-ORIGINAL-label groups
+    within the stack) connects exactly the slots of each global component,
+    and its unique monotone fixpoint is the component's max vertex id, the
+    same value the replicated chase+hook+propagate computes (DESIGN.md
+    §Table-sharding).  The static label/mask stacks are exchanged once
+    (building the per-device group structure); each outer round then
+    exchanges only the evolving estimates."""
+    geom = _shard_geom_for(dec, connectivity)
+    T0 = _own_faces(owned, dec)
+    exchange = geom.exchange_fn(-1)
+    T0s = exchange(T0)                       # static: group structure
+    if gather_mask:
+        Ms = geom.exchange_fn(False)(_own_faces(mask_owned, dec))
+    else:
+        Ms = T0s >= 0                        # labels are -1 iff unmasked
+    group_max, perm, sorted_vals = make_group_max(T0s)
+
+    scoords, svalid = geom.stack_coords(coords)
+    grid = jnp.asarray(dec.grid, dtype=jnp.int32)
+    stride = jnp.asarray(dec.stride, dtype=dec.id_dtype)
+    offsets = neighbor_offsets(dec.ndim, connectivity)
+
+    def cut_max(L):
+        best = L
+        for off in offsets:
+            nx = scoords + jnp.asarray(off, dtype=jnp.int32)
+            valid = jnp.all((nx >= 0) & (nx < grid), axis=1) & svalid
+            g = (jnp.clip(nx, 0, grid - 1).astype(dec.id_dtype)
+                 * stride).sum(axis=1)
+            is_b, s = dec.boundary_pos(g, jnp)
+            okn, idx = geom.pos_to_stack(s)
+            ok = valid & is_b & okn
+            safe = jnp.clip(idx, 0, geom.stack_size - 1)
+            nl = jnp.where(ok, L[safe], -1)
+            nm = jnp.where(ok, Ms[safe], False)
+            best = jnp.where(Ms & nm, jnp.maximum(best, nl), best)
+        return best
+
+    def refine(stack):
+        return hook_propagate(stack, cut_max, group_max, max_iter)
+
+    def reduce_any(x):
+        return lax.pmax(x.astype(jnp.int32), dec.names) > 0
+
+    stackG, _, rounds, iters, ok = sharded_fixpoint(
+        T0, exchange, refine, reduce_any, max_rounds=max_iter)
+
+    # substitution: adopt the flooded value at the own label's slot when it
+    # has one, then the value search over the STATIC stack labels (an owned
+    # interior root is not a slot but shares its value with its piece's cut
+    # vertices, which are in the own chunk whenever the piece reaches a cut)
+    o = owned.ravel()
+    is_b, s = dec.boundary_pos(jnp.clip(o, 0), jnp)
+    okp, idx = geom.pos_to_stack(s)
+    chased = jnp.where((o >= 0) & is_b & okp,
+                       stackG[jnp.clip(idx, 0, geom.stack_size - 1)], o)
+    final = value_substitute(o, chased, sorted_vals, stackG[perm])
+    return final, Ms, geom, rounds, iters, ok
+
+
+def _cc_block(mask_blk, coords=None, *, dec: BlockDecomp, connectivity,
+              gather_mask: bool = True, fused_impl: str = "auto",
+              table_mode: str = "replicated", table_max_iter: int = 64):
     """gather_mask=False is the §Perf variant: the boundary mask is exactly
     (T >= 0) — labels are -1 where unmasked — so the mask all-gather is
-    redundant and dropped (less exchange traffic, bit-identical)."""
+    redundant and dropped (less exchange traffic, bit-identical).
+
+    `coords` is the decomposition's boundary slot-coordinate table; the
+    public entry points thread `dec.boundary_coords_dev` through the
+    shard_map as an argument so the O(table_size * ndim) constant is not
+    rebaked into every executable.  Direct internal callers may omit it —
+    the fallback closes over the cached constant (old behaviour)."""
+    if coords is None:
+        coords = dec.boundary_coords_dev
     # lazy: repro.kernels imports repro.core.steepest at module load
     from repro.kernels.ops import fused_local_phase
 
@@ -535,30 +912,67 @@ def _cc_block(mask_blk, *, dec: BlockDecomp, connectivity,
     d, stitch_rounds, local_iters, it0 = _cc_local_fixpoint(
         d, ext, connectivity)
 
-    # 4. to global ids + the single communication phase: labels (+ masks)
+    # 4. to global ids
     gid = _gid_map(dec).ravel()
     dg = jnp.where(d >= 0, gid[jnp.clip(d, 0)], -1).reshape(dec.ext)
     owned = dg[dec.owned_slices]
-    T = _gather_table(owned, dec)
-    if gather_mask:
-        M = _gather_table(ext[dec.owned_slices], dec)
+    isz = np.dtype(dec.id_dtype).itemsize
+
+    if table_mode == "replicated":
+        # 4b. the single communication phase: labels (+ masks)
+        T = _gather_table(owned, dec)
+        if gather_mask:
+            M = _gather_table(ext[dec.owned_slices], dec)
+        else:
+            M = T >= 0             # labels are -1 exactly where unmasked
+
+        # 5a. positional chase (the paper's table compression — resolves
+        #     chains through ghost labels, e.g. a part labeled with a
+        #     ghost's id)
+        Tstar, table_iters, chase_ok = _table_compress(T, dec,
+                                                       table_max_iter)
+        # 5b. hook + propagate (deviation (d2)): merge labels across cuts
+        G, (perm, sorted_vals), prop_iters, prop_ok = _table_propagate(
+            Tstar, M, coords, dec, connectivity, table_max_iter)
+
+        # 6. substitution: chase own label through the table, then take its
+        #    group's propagated maximum (value search over the sorted table)
+        o = owned.ravel()
+        is_b, pos = dec.boundary_pos(jnp.clip(o, 0), jnp)
+        chased = jnp.where((o >= 0) & is_b,
+                           Tstar[jnp.clip(pos, 0, Tstar.size - 1)], o)
+        final = value_substitute(o, chased, sorted_vals, G[perm])
+
+        table_iters = table_iters + prop_iters
+        comm = jnp.int32(1)
+        exch_rounds = jnp.int32(0)
+        converged = (chase_ok & prop_ok).astype(jnp.int32)
+        ghost_bytes = (jnp.float32(dec.n_valid_slots * isz)
+                       + (jnp.float32(dec.n_valid_slots) if gather_mask
+                          else 0.0))
+        table_bytes = jnp.float32(dec.table_size * (isz + 1))
+        masked_frac = (jnp.sum(M).astype(jnp.float32)
+                       / jnp.float32(max(dec.n_valid_slots, 1)))
     else:
-        M = T >= 0                 # labels are -1 exactly where unmasked
-
-    # 5a. positional chase (the paper's table compression — resolves chains
-    #     through ghost labels, e.g. a part labeled with a ghost's id)
-    Tstar, table_iters = _table_compress(T, dec)
-    # 5b. hook + propagate (deviation (d2)): merge labels across cuts
-    G, (perm, sorted_vals), prop_iters = _table_propagate(
-        Tstar, M, dec, connectivity)
-
-    # 6. substitution: chase own label through the table, then take its
-    #    group's propagated maximum (value search over the sorted table)
-    o = owned.ravel()
-    is_b, pos = dec.boundary_pos(jnp.clip(o, 0), jnp)
-    chased = jnp.where((o >= 0) & is_b,
-                       Tstar[jnp.clip(pos, 0, Tstar.size - 1)], o)
-    final = value_substitute(o, chased, sorted_vals, G[perm])
+        # 4b-6. sharded: max-flooding on the own+halo stack (no gather)
+        final, Ms, geom, exch_rounds, iters, ok = _sharded_cc_resolve(
+            owned, ext[dec.owned_slices], coords, dec, connectivity,
+            gather_mask, table_max_iter)
+        table_iters, _, converged = _preduce_stats(dec, iters, exch_rounds,
+                                                   ok)
+        comm = exch_rounds + jnp.int32(1)  # +1: the static label/mask stack
+        halo = geom.stack_size - geom.rows
+        ghost_bytes = (jnp.float32(halo * isz)
+                       * (exch_rounds.astype(jnp.float32) + 1.0)
+                       + (jnp.float32(halo) if gather_mask else 0.0))
+        # evolving stack + static label stack + own chunk + bool mask stack
+        table_bytes = jnp.float32((2 * geom.stack_size + geom.rows) * isz
+                                  + geom.stack_size)
+        # global fraction over in-domain slots (== the replicated number:
+        # pad slots are mask-False on both paths, deviation (p))
+        masked_frac = (lax.psum(
+            jnp.sum(Ms[:geom.rows]).astype(jnp.float32), dec.names)
+            / jnp.float32(max(dec.n_valid_slots, 1)))
 
     # pad table slots are label -1 / mask False by construction (the input
     # mask is padded False, deviation (p)), so they are excluded here
@@ -566,40 +980,49 @@ def _cc_block(mask_blk, *, dec: BlockDecomp, connectivity,
     i0 = lax.pmax(it0, dec.names)
     stats = DPCStats(
         local_iters=lax.pmax(local_iters, dec.names),
-        table_iters=table_iters + prop_iters,
+        table_iters=table_iters,
         stitch_rounds=lax.pmax(stitch_rounds, dec.names),
-        ghost_bytes=jnp.float32(dec.n_valid_slots * T.dtype.itemsize)
-        + (jnp.float32(dec.n_valid_slots) if gather_mask else 0.0),
-        masked_ghost_fraction=jnp.sum(M).astype(jnp.float32)
-        / jnp.float32(max(dec.n_valid_slots, 1)),
+        ghost_bytes=ghost_bytes,
+        masked_ghost_fraction=masked_frac,
         pad_fraction=jnp.float32(dec.pad_fraction),
-        comm_phases=jnp.int32(1),
+        comm_phases=comm,
         kernel_rounds=kr,
         # the kernel pre-saturates the FIRST compression only; the unfused
         # first compression needs >= kr rounds, the fused one used i0
         global_iters_saved=jnp.maximum(kr - i0, 0),
+        table_bytes_peak=table_bytes,
+        exchange_rounds=exch_rounds,
+        converged=converged,
     )
     return final.reshape(mask_blk.shape), stats
 
 
 def distributed_connected_components(mask, mesh: Mesh, connectivity: int = 6,
                                      gather_mask: bool = True,
-                                     fused_impl: str = "auto"):
+                                     fused_impl: str = "auto",
+                                     table_mode: str = "replicated",
+                                     table_max_iter: int = 64):
     """Mask-implicit connected components of a block-sharded grid (Alg. 3 +
     Alg. 2).  Any grid extent works: non-divisible extents are padded with
     mask=False sentinels, which are inert in every phase (deviation (p) in
     DESIGN.md).  Returns (labels, DPCStats); labels carry the largest vertex
     id of the component, -1 where unmasked.  gather_mask=False drops the
     redundant mask exchange (§Perf); fused_impl selects the block-local
-    phase implementation (bit-identical labels across choices)."""
+    phase implementation; table_mode="sharded" keeps the boundary table
+    distributed (deviation (s)).  Labels are bit-identical across all
+    choices."""
+    _check_table_mode(table_mode)
     dec = _decomp_for(mesh, mask.shape)
     mask = _pad_input(mask, dec, False)  # padding is never masked
     fn = partial(_cc_block, dec=dec, connectivity=connectivity,
-                 gather_mask=gather_mask, fused_impl=fused_impl)
+                 gather_mask=gather_mask, fused_impl=fused_impl,
+                 table_mode=table_mode, table_max_iter=table_max_iter)
     spec = P(*dec.names, *([None] * (mask.ndim - dec.k)))
-    mapped = shard_map_norep(fn, mesh, (spec,),
+    mapped = shard_map_norep(fn, mesh, (spec, P(None, None)),
                              (spec, DPCStats(*([P()] * _N_STATS))))
-    labels, stats = mapped(mask)
+    labels, stats = mapped(mask, dec.boundary_coords_dev)
+    check_converged(stats.converged, "distributed_connected_components",
+                    table_max_iter)
     return _unpad_output(labels, dec), stats
 
 
@@ -621,11 +1044,15 @@ def _pad_input_batch(x, dec: BlockDecomp, fill):
     return jnp.pad(x, pads, constant_values=fill)
 
 
-def _batched_block_call(fn, mesh, dec: BlockDecomp, x):
+def _batched_block_call(fn, mesh, dec: BlockDecomp, x, extra=()):
+    """`extra` holds replicated non-batched args (e.g. the slot-coordinate
+    table), broadcast across both the request dim and the mesh."""
     spec = P(None, *dec.names, *([None] * (x.ndim - 1 - dec.k)))
-    mapped = shard_map_norep(jax.vmap(fn), mesh, (spec,),
+    especs = tuple(P(*([None] * np.ndim(e))) for e in extra)
+    vfn = jax.vmap(fn, in_axes=(0,) + (None,) * len(extra))
+    mapped = shard_map_norep(vfn, mesh, (spec,) + especs,
                              (spec, DPCStats(*([P(None)] * _N_STATS))))
-    labels, stats = mapped(x)
+    labels, stats = mapped(x, *extra)
     if dec.ragged:
         labels = labels[(slice(None),) + tuple(slice(0, g) for g in dec.grid)]
     return labels, stats
@@ -633,29 +1060,44 @@ def _batched_block_call(fn, mesh, dec: BlockDecomp, x):
 
 def distributed_manifold_batch(orders, mesh: Mesh, connectivity: int = 6,
                                descending: bool = True,
-                               fused_impl: str = "auto"):
+                               fused_impl: str = "auto",
+                               table_mode: str = "replicated",
+                               table_max_iter: int = 64):
     """Batched `distributed_manifold`: orders is a (B, *grid) stack of order
     fields sharing one extent; returns ((B, *grid) labels, DPCStats with a
     leading (B,) dim).  Per item bit-identical to the single-request call."""
+    _check_table_mode(table_mode)
     dec = _decomp_for(mesh, orders.shape[1:])
     if not descending:
         orders = dec.size - 1 - orders  # ascending = descending on flipped
     orders = _pad_input_batch(orders, dec, -1)
     fn = partial(_manifold_block, dec=dec, connectivity=connectivity,
-                 fused_impl=fused_impl)
-    return _batched_block_call(fn, mesh, dec, orders)
+                 fused_impl=fused_impl, table_mode=table_mode,
+                 table_max_iter=table_max_iter)
+    labels, stats = _batched_block_call(fn, mesh, dec, orders)
+    check_converged(stats.converged, "distributed_manifold_batch",
+                    table_max_iter)
+    return labels, stats
 
 
 def distributed_connected_components_batch(masks, mesh: Mesh,
                                            connectivity: int = 6,
                                            gather_mask: bool = True,
-                                           fused_impl: str = "auto"):
+                                           fused_impl: str = "auto",
+                                           table_mode: str = "replicated",
+                                           table_max_iter: int = 64):
     """Batched `distributed_connected_components`: masks is a (B, *grid)
     stack of feature masks sharing one extent; returns ((B, *grid) labels,
     DPCStats with a leading (B,) dim).  Per item bit-identical to the
     single-request call."""
+    _check_table_mode(table_mode)
     dec = _decomp_for(mesh, masks.shape[1:])
     masks = _pad_input_batch(masks, dec, False)
     fn = partial(_cc_block, dec=dec, connectivity=connectivity,
-                 gather_mask=gather_mask, fused_impl=fused_impl)
-    return _batched_block_call(fn, mesh, dec, masks)
+                 gather_mask=gather_mask, fused_impl=fused_impl,
+                 table_mode=table_mode, table_max_iter=table_max_iter)
+    labels, stats = _batched_block_call(fn, mesh, dec, masks,
+                                        extra=(dec.boundary_coords_dev,))
+    check_converged(stats.converged, "distributed_connected_components_batch",
+                    table_max_iter)
+    return labels, stats

@@ -35,8 +35,15 @@ pads to `max(counts)` with inert sentinel slots (deviation (p)), so
 *imbalanced* (METIS-style) partitions — and vertex counts that do not
 divide the partition count — are first-class.
 
-`GraphDPCStats.comm_phases` counts the all_gather phases actually traced
-into the program (the paper's budget: exactly one).
+`GraphDPCStats.comm_phases` counts the bulk exchange phases actually traced
+into the program (the paper's budget: exactly one for the replicated
+table).  `table_mode="sharded"` (deviation (s) in DESIGN.md) replaces the
+cut-table all_gather with a partition-adjacency halo: each device keeps its
+own cut row plus one chunk per adjacent partition (`_GraphShardGeom`),
+exchanged by a static schedule of `lax.ppermute` rounds, and resolves the
+global components by the relayed max-flooding fixpoint of
+`core/_table.sharded_fixpoint` — bit-identical labels, per-device table
+bytes bounded by (1 + degree) cut rows instead of `nparts` rows.
 """
 from __future__ import annotations
 
@@ -49,7 +56,8 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ._shardmap import shard_map_norep
-from ._table import (pointer_chase, make_group_max, hook_propagate,
+from ._table import (check_converged, check_table_mode, pointer_chase,
+                     make_group_max, hook_propagate, sharded_fixpoint,
                      value_substitute)
 from .stats import GraphDPCStats
 from .steepest import graph_mask_argmax
@@ -218,6 +226,97 @@ class GraphDecomp:
         self.cut_slot_sorted = slot_of[allcut[order]].astype(np.int32)
 
 
+class _GraphShardGeom:
+    """Sharded-table geometry of a vertex partition (deviation (s)).
+
+    The unstructured analog of the block backend's `_ShardGeom`: where the
+    lattice derives neighbor chunks from the mesh axes, here the *partition
+    adjacency graph* (two partitions are adjacent iff a cut edge joins
+    them) is read off the concrete cut-edge list.  Every partition's stack
+    holds its own cut row (chunk 0) plus one chunk per adjacent partition,
+    padded to the global maximum degree `d_max` with inert fill chunks.
+
+    The halo exchange is a static schedule of `lax.ppermute` rounds: the
+    directed receive pairs {(q -> p) : q adjacent to p} are greedily
+    decomposed into partial permutations (ppermute forbids duplicate
+    sources, so a partition multicasting its row to `deg` neighbors spans
+    >= deg rounds; bipartite edge coloring bounds the schedule at d_max
+    rounds, the greedy pass may use slightly more).  `store_idx[p, k]` says
+    which chunk partition p stores round k's received row into — `n_chunks`
+    (out of range, dropped) when p receives nothing that round.  All of
+    this is numpy precomputed once per decomposition and threaded into the
+    shard_map as per-device rows, like the other GraphDecomp tables.
+    """
+
+    def __init__(self, dec: GraphDecomp):
+        c = dec.c_max
+        pe_s = dec.cut_edge_src // max(c, 1)
+        pe_d = dec.cut_edge_dst // max(c, 1)
+        adjset = [set() for _ in range(dec.nparts)]
+        for a, b in zip(pe_s.tolist(), pe_d.tolist()):
+            adjset[a].add(b)
+            adjset[b].add(a)
+        adj = [sorted(s) for s in adjset]
+        self.d_max = max((len(a) for a in adj), default=0)
+        self.n_chunks = 1 + self.d_max
+        self.stack_size = self.n_chunks * c
+        chunk_of = np.full((dec.nparts, dec.nparts), -1, np.int32)
+        for p in range(dec.nparts):
+            chunk_of[p, p] = 0
+            for i, q in enumerate(adj[p]):
+                chunk_of[p, q] = 1 + i
+        self.chunk_of = chunk_of
+
+        pairs = [(q, p) for p in range(dec.nparts) for q in adj[p]]
+        perms = []
+        while pairs:
+            used_s, used_d, rnd, rest = set(), set(), [], []
+            for q, p in pairs:
+                if q not in used_s and p not in used_d:
+                    used_s.add(q)
+                    used_d.add(p)
+                    rnd.append((q, p))
+                else:
+                    rest.append((q, p))
+            perms.append(tuple(rnd))
+            pairs = rest
+        self.round_perms = tuple(perms)
+        store_idx = np.full((dec.nparts, max(len(perms), 1)), self.n_chunks,
+                            np.int32)
+        for k, rnd in enumerate(perms):
+            for q, p in rnd:
+                store_idx[p, k] = chunk_of[p, q]
+        self.store_idx = store_idx
+
+        # cut edges rewritten to per-partition stack slots: edge (u -> v)
+        # appears in p's list iff BOTH endpoint partitions have a chunk in
+        # p's stack; pad rows with src == stack_size (gated + dropped)
+        srow = dec.cut_edge_src % max(c, 1)
+        drow = dec.cut_edge_dst % max(c, 1)
+        lists = []
+        for p in range(dec.nparts):
+            cs, cd = chunk_of[p, pe_s], chunk_of[p, pe_d]
+            sel = (cs >= 0) & (cd >= 0)
+            lists.append((cs[sel] * c + srow[sel], cd[sel] * c + drow[sel]))
+        self.se_max = max((len(a) for a, _ in lists), default=0)
+        ses = np.full((dec.nparts, max(self.se_max, 1)), self.stack_size,
+                      np.int32)
+        sed = np.zeros((dec.nparts, max(self.se_max, 1)), np.int32)
+        for p, (a, b) in enumerate(lists):
+            ses[p, :len(a)] = a
+            sed[p, :len(b)] = b
+        self.stack_edge_src = ses
+        self.stack_edge_dst = sed
+
+
+def _graph_shard_geom(dec: GraphDecomp) -> _GraphShardGeom:
+    """The sharded geometry, built once per decomposition (numpy)."""
+    geom = dec.__dict__.get("_shard_geom")
+    if geom is None:
+        geom = dec.__dict__["_shard_geom"] = _GraphShardGeom(dec)
+    return geom
+
+
 def _slot_lookup(dec: GraphDecomp):
     """(values -> (hit, slot)) via the sorted cut-gid table."""
     sg = jnp.asarray(dec.cut_gid_sorted, dtype=dec.id_dtype)
@@ -232,10 +331,12 @@ def _slot_lookup(dec: GraphDecomp):
 
 
 def _cc_partition(local_mask, lgid, local_ghost, owned_lidx, es, er,
-                  cut_lidx, *, dec: GraphDecomp, name: str,
-                  gather_mask: bool):
+                  cut_lidx, *shard, dec: GraphDecomp, name: str,
+                  gather_mask: bool, table_mode: str = "replicated",
+                  table_max_iter: int = 64):
     """One partition's program (runs under shard_map; leading axis is the
-    singleton shard dim)."""
+    singleton shard dim).  `shard` carries the sharded-geometry rows
+    (store_idx, chunk_of, stack edges) when table_mode == "sharded"."""
     m = local_mask[0]
     gid = lgid[0]
     ghost = local_ghost[0]
@@ -254,14 +355,18 @@ def _cc_partition(local_mask, lgid, local_ghost, owned_lidx, es, er,
     dg = jnp.where(res.labels >= 0, gid[jnp.clip(res.labels, 0)], dt(-1))
     owned = dg[ol]
 
-    n_gather = 0
+    isz = jnp.dtype(dt).itemsize
     if dec.table_size == 0:
         # no inter-partition edges (or a single partition): fully local
         final = owned
         table_iters = jnp.int32(0)
         ghost_bytes = jnp.float32(0.0)
         masked_frac = jnp.float32(0.0)
-    else:
+        comm = jnp.int32(0)
+        exch_rounds = jnp.int32(0)
+        table_bytes = jnp.float32(0.0)
+        converged = jnp.int32(1)
+    elif table_mode == "replicated":
         # 5. the ONE communication phase: owned cut labels (+ masks in the
         #    same gather; gather_mask=False derives M = T >= 0 instead,
         #    DESIGN.md §Perf)
@@ -274,7 +379,6 @@ def _cc_partition(local_mask, lgid, local_ghost, owned_lidx, es, er,
         else:
             payload = cut_lab[None]
         g = lax.all_gather(payload, name)        # (nparts, rows, c_max)
-        n_gather += 1
         T = g[:, 0, :].reshape(-1)
         M = (g[:, 1, :].reshape(-1) != 0) if gather_mask else (T >= 0)
 
@@ -285,7 +389,8 @@ def _cc_partition(local_mask, lgid, local_ghost, owned_lidx, es, er,
             hit, slot = slot_lookup(t)
             return jnp.where(hit, t[jnp.clip(slot, 0, t.size - 1)], t)
 
-        Tstar, chase_iters = pointer_chase(T, chase_lookup)
+        Tstar, chase_iters, chase_ok = pointer_chase(T, chase_lookup,
+                                                     table_max_iter)
 
         # 6b. hook + propagate over the static cut-edge list (deviation (d2))
         group_max, perm, sorted_vals = make_group_max(Tstar)
@@ -297,7 +402,8 @@ def _cc_partition(local_mask, lgid, local_ghost, owned_lidx, es, er,
             tgt = jnp.where(ok, ces, L.size)
             return L.at[tgt].max(jnp.where(ok, L[ced], dt(-1)), mode="drop")
 
-        G, prop_iters = hook_propagate(Tstar, cut_max, group_max)
+        G, prop_iters, prop_ok = hook_propagate(Tstar, cut_max, group_max,
+                                                table_max_iter)
 
         # 7. substitution: chase own label once, adopt its group's maximum
         hit, slot = slot_lookup(owned)
@@ -308,37 +414,143 @@ def _cc_partition(local_mask, lgid, local_ghost, owned_lidx, es, er,
         rows = 2 if gather_mask else 1
         # pad cut slots (cut_lidx == -1) carry label -1 / mask False and are
         # excluded from the exchange accounting (deviation (p) in DESIGN.md)
-        ghost_bytes = jnp.float32(dec.n_cut * rows * jnp.dtype(dt).itemsize)
+        ghost_bytes = jnp.float32(dec.n_cut * rows * isz)
         masked_frac = (jnp.sum(M).astype(jnp.float32)
                        / jnp.float32(max(dec.n_cut, 1)))
+        comm = jnp.int32(1)
+        exch_rounds = jnp.int32(0)
+        # gathered payload (labels + mask as id dtype), or labels + bool M
+        table_bytes = jnp.float32(
+            dec.table_size * ((2 * isz) if gather_mask else (isz + 1)))
+        converged = (chase_ok & prop_ok).astype(jnp.int32)
+    else:
+        # 5'-7'. sharded (deviation (s)): own cut row + one chunk per
+        #    adjacent partition, max-flooding relayed by ppermute rounds —
+        #    no all_gather.  The flood relation (masked in-stack cut edges +
+        #    equal-static-label groups within the stack) connects exactly
+        #    each global component's slots; its unique monotone fixpoint is
+        #    the component max, the value the replicated chase+propagate
+        #    computes (DESIGN.md §Table-sharding).
+        geom = _graph_shard_geom(dec)
+        store, chunk_row, ses, sed = (a[0] for a in shard)
+        size = geom.stack_size
+        cvalid = cl >= 0
+        cli = jnp.clip(cl, 0)
+        cut_lab = jnp.where(cvalid, dg[cli], dt(-1))
+
+        def make_exchange(fill):
+            def exchange(own_row):
+                stack = jnp.full((geom.n_chunks, dec.c_max), fill,
+                                 own_row.dtype)
+                stack = stack.at[0].set(own_row)
+                for k, perm_k in enumerate(geom.round_perms):
+                    recv = lax.ppermute(own_row, name, perm_k)
+                    stack = stack.at[store[k]].set(recv, mode="drop")
+                return stack.reshape(-1)
+            return exchange
+
+        # static stacks, exchanged once: the group structure and the mask
+        exchange = make_exchange(-1)
+        T0s = exchange(cut_lab)
+        if gather_mask:
+            cut_m = jnp.where(cvalid, m[cli], False)
+            Ms = make_exchange(False)(cut_m)
+        else:
+            Ms = T0s >= 0            # labels are -1 iff unmasked
+        group_max, perm, sorted_vals = make_group_max(T0s)
+
+        def cut_max(L):
+            ss = jnp.clip(ses, 0, size - 1)
+            dd = jnp.clip(sed, 0, size - 1)
+            ok = (ses < size) & Ms[ss] & Ms[dd]
+            tgt = jnp.where(ok, ss, size)
+            return L.at[tgt].max(jnp.where(ok, L[dd], dt(-1)), mode="drop")
+
+        def refine(stack):
+            return hook_propagate(stack, cut_max, group_max, table_max_iter)
+
+        def reduce_any(x):
+            return lax.pmax(x.astype(jnp.int32), name) > 0
+
+        stackG, _, rounds, iters, ok = sharded_fixpoint(
+            cut_lab, exchange, refine, reduce_any,
+            max_rounds=table_max_iter)
+
+        # substitution: an owned label is a local vertex id, so its slot
+        # (when it is a cut vertex) lives in this stack — own chunk or an
+        # adjacent partition's; interior roots are found by value over the
+        # static stack labels, exactly as in the replicated value search
+        slot_lookup = _slot_lookup(dec)
+        hit, slot = slot_lookup(owned)
+        chunk = chunk_row[jnp.clip(slot // dec.c_max, 0, dec.nparts - 1)]
+        sidx = chunk * dec.c_max + slot % dec.c_max
+        chased = jnp.where(hit & (chunk >= 0),
+                           stackG[jnp.clip(sidx, 0, size - 1)], owned)
+        final = value_substitute(owned, chased, sorted_vals, stackG[perm])
+
+        table_iters = lax.pmax(iters, name)
+        exch_rounds = rounds
+        comm = rounds + jnp.int32(1)     # +1: the static label/mask stacks
+        halo = size - dec.c_max
+        ghost_bytes = (jnp.float32(halo * isz)
+                       * (rounds.astype(jnp.float32) + 1.0)
+                       + (jnp.float32(halo) if gather_mask else 0.0))
+        # evolving stack + static label stack + own row + bool mask stack
+        table_bytes = jnp.float32((2 * size + dec.c_max) * isz + size)
+        # global fraction over real slots (== the replicated number: pad
+        # slots are mask-False on both paths, deviation (p))
+        masked_frac = (lax.psum(
+            jnp.sum(Ms[:dec.c_max]).astype(jnp.float32), name)
+            / jnp.float32(max(dec.n_cut, 1)))
+        converged = lax.pmin(ok.astype(jnp.int32), name)
 
     stats = GraphDPCStats(
         local_iters=lax.pmax(res.n_compress_iter, name),
-        table_iters=table_iters,   # identical on all devices (same table)
+        table_iters=table_iters,
         stitch_rounds=lax.pmax(res.n_rounds, name),
         ghost_bytes=ghost_bytes,
         masked_ghost_fraction=masked_frac,
-        comm_phases=jnp.int32(n_gather),
+        comm_phases=comm,
         pad_fraction=jnp.float32(dec.pad_fraction),
         kernel_rounds=jnp.int32(0),        # no fused grid kernel on graphs
         global_iters_saved=jnp.int32(0),
+        table_bytes_peak=table_bytes,
+        exchange_rounds=exch_rounds,
+        converged=converged,
     )
     return final[None], stats
 
 
+def _shard_geom_args(decomp: GraphDecomp, table_mode: str):
+    """The per-device sharded-geometry rows threaded into the shard_map
+    (empty for the replicated layout)."""
+    if table_mode != "sharded" or decomp.table_size == 0:
+        return ()
+    geom = _graph_shard_geom(decomp)
+    return (jnp.asarray(geom.store_idx), jnp.asarray(geom.chunk_of),
+            jnp.asarray(geom.stack_edge_src),
+            jnp.asarray(geom.stack_edge_dst))
+
+
 def distributed_connected_components_graph(mask, decomp: GraphDecomp,
                                            mesh: Mesh,
-                                           gather_mask: bool = True):
+                                           gather_mask: bool = True,
+                                           table_mode: str = "replicated",
+                                           table_max_iter: int = 64):
     """Mask-implicit connected components of a vertex-partitioned edge-list
     mesh (Alg. 3 + Alg. 2 on a table-driven decomposition).
 
     mask: global (n,) bool array (the feature mask; all-ones labels pure
     geometry).  mesh: 1-D device mesh with `decomp.nparts` devices (e.g.
-    ``make_dpc_mesh(nparts)``).  Returns (labels, GraphDPCStats): labels is
-    the global (n,) array carrying the largest vertex id of each component,
-    -1 where unmasked — bit-identical to single-device
-    `connected_components_graph`.
+    ``make_dpc_mesh(nparts)``).  table_mode picks the cut-table layout —
+    "replicated" (one all_gather) or "sharded" (own cut row + one chunk per
+    adjacent partition, ppermute exchange rounds; deviation (s) in
+    DESIGN.md).  Returns (labels, GraphDPCStats): labels is the global (n,)
+    array carrying the largest vertex id of each component, -1 where
+    unmasked — bit-identical to single-device `connected_components_graph`
+    under every table_mode.
     """
+    check_table_mode(table_mode)
     names = tuple(mesh.axis_names)
     if len(names) != 1:
         raise ValueError(f"graph CC needs a 1-D mesh, got axes {names}")
@@ -357,17 +569,21 @@ def distributed_connected_components_graph(mask, decomp: GraphDecomp,
     # ghost input values ride the input scatter (deviation (g1) in
     # DESIGN.md): every partition reads its owned + one-ring mask here
     local_mask = jnp.where(valid, mask[jnp.clip(lgid, 0)], False)
+    geom_args = _shard_geom_args(decomp, table_mode)
 
     fn = partial(_cc_partition, dec=decomp, name=name,
-                 gather_mask=gather_mask)
+                 gather_mask=gather_mask, table_mode=table_mode,
+                 table_max_iter=table_max_iter)
     spec = P(name, None)
-    mapped = shard_map_norep(fn, mesh, (spec,) * 7,
+    mapped = shard_map_norep(fn, mesh, (spec,) * (7 + len(geom_args)),
                              (spec, GraphDPCStats(*([P()] * _N_STATS))))
     owned_stack, stats = mapped(
         local_mask, lgid, jnp.asarray(decomp.local_ghost),
         jnp.asarray(decomp.owned_lidx),
         jnp.asarray(decomp.edge_src), jnp.asarray(decomp.edge_dst),
-        jnp.asarray(decomp.cut_lidx))
+        jnp.asarray(decomp.cut_lidx), *geom_args)
+    check_converged(stats.converged, "distributed_connected_components_graph",
+                    table_max_iter)
 
     # unpermute the (nparts, n_owned) owned labels back to global id order;
     # pad slots carry gid n and fall off the scatter (deviation (p))
@@ -379,7 +595,10 @@ def distributed_connected_components_graph(mask, decomp: GraphDecomp,
 
 def distributed_connected_components_graph_batch(masks, decomp: GraphDecomp,
                                                  mesh: Mesh,
-                                                 gather_mask: bool = True):
+                                                 gather_mask: bool = True,
+                                                 table_mode: str =
+                                                 "replicated",
+                                                 table_max_iter: int = 64):
     """Batched `distributed_connected_components_graph`: masks is a (B, n)
     stack of feature masks over ONE decomposed mesh (the multi-tenant
     serving case: many masks / thresholds of the same geometry).  The
@@ -388,6 +607,7 @@ def distributed_connected_components_graph_batch(masks, decomp: GraphDecomp,
     Returns ((B, n) labels, GraphDPCStats with a leading (B,) dim); per item
     bit-identical to the single-request call.
     """
+    check_table_mode(table_mode)
     names = tuple(mesh.axis_names)
     if len(names) != 1:
         raise ValueError(f"graph CC needs a 1-D mesh, got axes {names}")
@@ -409,27 +629,32 @@ def distributed_connected_components_graph_batch(masks, decomp: GraphDecomp,
     local_mask = jnp.where(valid[:, None, :],
                            masks[:, jnp.clip(lgid, 0)].transpose(1, 0, 2),
                            False)
+    geom_args = _shard_geom_args(decomp, table_mode)
 
     part_fn = partial(_cc_partition, dec=decomp, name=name,
-                      gather_mask=gather_mask)
+                      gather_mask=gather_mask, table_mode=table_mode,
+                      table_max_iter=table_max_iter)
 
-    def fn(local_mask, lgid, ghost, ol, es, er, cl):
+    def fn(local_mask, lgid, ghost, ol, es, er, cl, *geom):
         # local_mask: (1, B, n_local); the rest carry the singleton shard dim
         def one(m):
-            return part_fn(m[None], lgid, ghost, ol, es, er, cl)
+            return part_fn(m[None], lgid, ghost, ol, es, er, cl, *geom)
         owned, stats = jax.vmap(one)(local_mask[0])   # owned: (B, 1, n_owned)
         return owned.transpose(1, 0, 2), stats
 
     spec = P(name, None)
     bspec = P(name, None, None)
     mapped = shard_map_norep(
-        fn, mesh, (bspec,) + (spec,) * 6,
+        fn, mesh, (bspec,) + (spec,) * (6 + len(geom_args)),
         (bspec, GraphDPCStats(*([P(None)] * _N_STATS))))
     owned_stack, stats = mapped(
         local_mask, lgid, jnp.asarray(decomp.local_ghost),
         jnp.asarray(decomp.owned_lidx),
         jnp.asarray(decomp.edge_src), jnp.asarray(decomp.edge_dst),
-        jnp.asarray(decomp.cut_lidx))
+        jnp.asarray(decomp.cut_lidx), *geom_args)
+    check_converged(stats.converged,
+                    "distributed_connected_components_graph_batch",
+                    table_max_iter)
 
     labels = jnp.zeros((B, decomp.n), dtype=dt).at[
         :, jnp.asarray(decomp.owned_gid.reshape(-1))].set(

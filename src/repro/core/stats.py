@@ -25,7 +25,8 @@ import jax
 # the shared field prefix, in the canonical order both classes use
 STAT_FIELDS = ("local_iters", "table_iters", "stitch_rounds", "ghost_bytes",
                "masked_ghost_fraction", "pad_fraction", "comm_phases",
-               "kernel_rounds", "global_iters_saved")
+               "kernel_rounds", "global_iters_saved", "table_bytes_peak",
+               "exchange_rounds", "converged")
 
 
 def stats_as_dict(stats) -> dict:
@@ -59,6 +60,15 @@ class DPCStats(NamedTuple):
                                    # max(kernel_rounds - local_iters, 0) —
                                    # the unfused loop needs >= kernel_rounds
                                    # rounds to resolve the same chains
+    table_bytes_peak: jax.Array    # per-device bytes materialized for the
+                                   # boundary-table resolution (replicated:
+                                   # the full gathered table; sharded: own
+                                   # faces + halo stack, deviation (s))
+    exchange_rounds: jax.Array     # sharded mode: outer halo-exchange rounds
+                                   # of the table fixpoint (0 = replicated)
+    converged: jax.Array           # 1 iff every table fixpoint reached its
+                                   # fixed point within max_iter (a 0 here
+                                   # raises eagerly; see _table.check_converged)
 
     def as_dict(self) -> dict:
         return stats_as_dict(self)
@@ -79,6 +89,14 @@ class GraphDPCStats(NamedTuple):
     kernel_rounds: jax.Array    # always 0: the fused grid kernel does not
                                 # apply to unstructured partitions
     global_iters_saved: jax.Array  # always 0 (see kernel_rounds)
+    table_bytes_peak: jax.Array    # per-device bytes materialized for the
+                                   # cut-table resolution (replicated: full
+                                   # gathered table (+mask); sharded: own
+                                   # row + neighbor halo, deviation (s))
+    exchange_rounds: jax.Array     # sharded mode: outer halo-exchange rounds
+                                   # of the cut fixpoint (0 = replicated)
+    converged: jax.Array           # 1 iff every table fixpoint reached its
+                                   # fixed point within max_iter
 
     def as_dict(self) -> dict:
         return stats_as_dict(self)

@@ -140,6 +140,8 @@ class _WorkItem:
                             # ascending already flipped host-side)
     connectivity: int
     gather_mask: bool
+    table_mode: str         # boundary/cut table layout (deviation (s))
+    table_max_iter: int
     mesh: Any               # distributed only
     decomp: Any             # distributed graph only
     senders: Any            # graph only
@@ -232,7 +234,10 @@ class TopologyEngine:
             return _WorkItem(kind=kind, domain=req.domain,
                              backend=req.backend,
                              payload=payload, connectivity=req.connectivity,
-                             gather_mask=req.gather_mask, mesh=req.mesh,
+                             gather_mask=req.gather_mask,
+                             table_mode=req.table_mode,
+                             table_max_iter=req.table_max_iter,
+                             mesh=req.mesh,
                              decomp=req.decomp, senders=req.senders,
                              receivers=req.receivers, req_idx=idx, role=role)
 
@@ -276,7 +281,7 @@ class TopologyEngine:
             return ("grid", it.backend, it.kind, it.connectivity,
                     it.gather_mask,
                     bucket_shape(it.payload.shape, self.min_extent),
-                    mesh_key)
+                    mesh_key, it.table_mode, it.table_max_iter)
         if it.backend == "pure":
             # same-geometry masks batch together; the compiled executable is
             # nonetheless shared across graphs of equal (n, m) because the
@@ -284,7 +289,8 @@ class TopologyEngine:
             graph_key = (it.payload.shape[0], np.asarray(it.senders).size,
                          id(it.senders), id(it.receivers))
         else:
-            graph_key = (id(it.decomp), it.gather_mask)
+            graph_key = (id(it.decomp), it.gather_mask, it.table_mode,
+                         it.table_max_iter)
         return ("graph", it.backend, it.kind, graph_key)
 
     def _merge_grid_buckets(self, buckets: dict) -> dict:
@@ -344,6 +350,7 @@ class TopologyEngine:
         the stacked padded payload (plus edge lists for pure graphs) and
         returns (labels, stats-or-None)."""
         conn, gm = it.connectivity, it.gather_mask
+        tm, tmi = it.table_mode, it.table_max_iter
         if it.domain == "grid":
             if it.backend == "pure":
                 if it.kind == "cc":
@@ -355,10 +362,11 @@ class TopologyEngine:
             mesh = it.mesh
             if it.kind == "cc":
                 fn = lambda b: distributed_connected_components_batch(
-                    b, mesh, conn, gm)
+                    b, mesh, conn, gm, table_mode=tm, table_max_iter=tmi)
             else:
                 fn = lambda b: distributed_manifold_batch(
-                    b, mesh, conn, descending=True)
+                    b, mesh, conn, descending=True, table_mode=tm,
+                    table_max_iter=tmi)
             return jax.jit(fn), True
         if it.backend == "pure":
             if it.kind == "cc":
@@ -370,7 +378,7 @@ class TopologyEngine:
             return jax.jit(jax.vmap(one, in_axes=(0, None, None))), False
         decomp, mesh = it.decomp, it.mesh
         fn = lambda b: distributed_connected_components_graph_batch(
-            b, decomp, mesh, gm)
+            b, decomp, mesh, gm, table_mode=tm, table_max_iter=tmi)
         return jax.jit(fn), True
 
     # --- execution ------------------------------------------------------------

@@ -32,12 +32,14 @@ _DEFAULT_MIX = (("cc", 0.5), ("ms", 0.2), ("manifold", 0.1),
 
 def synthetic_requests(n_requests: int, shapes, mix=None, connectivity=6,
                        sweep_k: int = 4, *, seed: int, backend: str = "pure",
-                       mesh=None) -> list:
+                       mesh=None, table_mode: str = "replicated") -> list:
     """A deterministic list of mixed TopologyRequests.
 
     shapes: tuple of grid extents to rotate through; mix: tuple of
     (query, weight) over {"cc", "ms", "manifold", "threshold_sweep"};
     seed: required keyword — the single knob that reproduces a workload.
+    `table_mode` applies to distributed backends only (sharded boundary
+    table, deviation (s)); request contents are independent of it.
     """
     mix = mix or _DEFAULT_MIX
     queries = [q for q, _ in mix]
@@ -51,6 +53,8 @@ def synthetic_requests(n_requests: int, shapes, mix=None, connectivity=6,
         field = rng.standard_normal(shape)
         common = dict(connectivity=connectivity, backend=backend, mesh=mesh,
                       tag=i)
+        if backend == "distributed":
+            common["table_mode"] = table_mode
         if query == "cc":
             reqs.append(TopologyRequest(
                 "cc", mask=jnp.asarray(field > rng.uniform(-0.5, 0.5)),
@@ -101,11 +105,13 @@ class WorkloadTrace:
     sweep_k: int = 4
     arrivals: tuple = ()     # ((arrival_time, deadline-or-None), ...) or ()
 
-    def requests(self, backend: str = "pure", mesh=None) -> list:
+    def requests(self, backend: str = "pure", mesh=None,
+                 table_mode: str = "replicated") -> list:
         return synthetic_requests(
             self.n_requests, self.shapes, mix=self.mix,
             connectivity=self.connectivity, sweep_k=self.sweep_k,
-            seed=self.seed, backend=backend, mesh=mesh)
+            seed=self.seed, backend=backend, mesh=mesh,
+            table_mode=table_mode)
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)

@@ -51,6 +51,7 @@ from .core.distributed import (distributed_manifold,
 from .core.distributed_graph import (
     distributed_connected_components_graph,
     distributed_connected_components_graph_batch)
+from .core._table import check_table_mode
 
 QUERIES = ("cc", "ms", "manifold", "threshold_sweep")
 DOMAINS = ("grid", "graph")
@@ -85,6 +86,10 @@ class TopologyRequest:
     connectivity: int = 6
     descending: bool = True
     gather_mask: bool = True
+    table_mode: str = "replicated"   # boundary/cut table layout: replicated
+                                     # all_gather or sharded halo stack
+                                     # (deviation (s) in DESIGN.md)
+    table_max_iter: int = 64
     # distributed plumbing
     mesh: Any = None
     decomp: Any = None
@@ -105,6 +110,11 @@ class TopologyRequest:
         if self.domain == "graph" and (self.senders is None
                                        or self.receivers is None):
             raise ValueError("graph requests need senders= and receivers=")
+        check_table_mode(self.table_mode)
+        if self.table_mode != "replicated" and self.backend != "distributed":
+            raise ValueError("table_mode='sharded' needs "
+                             "backend='distributed' (the pure backends "
+                             "have no boundary table)")
         if self.backend == "distributed":
             if self.mesh is None:
                 raise ValueError("distributed requests need mesh=")
@@ -148,7 +158,8 @@ def _submit_cc(req: TopologyRequest) -> TopologyResult:
                 meta={"n_rounds": res.n_rounds,
                       "n_compress_iter": res.n_compress_iter})
         labels, st = distributed_connected_components(
-            req.mask, req.mesh, req.connectivity, req.gather_mask)
+            req.mask, req.mesh, req.connectivity, req.gather_mask,
+            table_mode=req.table_mode, table_max_iter=req.table_max_iter)
         return TopologyResult("cc", labels=labels, stats=st.as_dict(),
                               tag=req.tag)
     if req.backend == "pure":
@@ -159,7 +170,8 @@ def _submit_cc(req: TopologyRequest) -> TopologyResult:
             meta={"n_rounds": res.n_rounds,
                   "n_compress_iter": res.n_compress_iter})
     labels, st = distributed_connected_components_graph(
-        req.mask, req.decomp, req.mesh, req.gather_mask)
+        req.mask, req.decomp, req.mesh, req.gather_mask,
+        table_mode=req.table_mode, table_max_iter=req.table_max_iter)
     return TopologyResult("cc", labels=labels, stats=st.as_dict(),
                           tag=req.tag)
 
@@ -177,7 +189,9 @@ def _submit_manifold(req: TopologyRequest) -> TopologyResult:
                               labels=labels.reshape(req.order.shape),
                               meta={"n_iter": it}, tag=req.tag)
     labels, st = distributed_manifold(req.order, req.mesh, req.connectivity,
-                                      req.descending)
+                                      req.descending,
+                                      table_mode=req.table_mode,
+                                      table_max_iter=req.table_max_iter)
     return TopologyResult("manifold", labels=labels, stats=st.as_dict(),
                           tag=req.tag)
 
@@ -207,9 +221,13 @@ def _submit_ms(req: TopologyRequest) -> TopologyResult:
     # (each direction bit-identical to the pure manifolds, so the hash is
     # bit-identical to pure ms_segmentation on the same order field)
     desc, st_d = distributed_manifold(req.order, req.mesh, req.connectivity,
-                                      descending=True)
+                                      descending=True,
+                                      table_mode=req.table_mode,
+                                      table_max_iter=req.table_max_iter)
     asc, st_a = distributed_manifold(req.order, req.mesh, req.connectivity,
-                                     descending=False)
+                                     descending=False,
+                                     table_mode=req.table_mode,
+                                     table_max_iter=req.table_max_iter)
     seg = _pair_hash(desc, asc, req.order.size)
     return TopologyResult("ms", ascending=asc, descending=desc,
                           segmentation=seg,
@@ -235,7 +253,8 @@ def _submit_sweep(req: TopologyRequest) -> TopologyResult:
                                   tag=req.tag)
         labels, st = distributed_connected_components_batch(
             field[None] > thr.reshape((-1,) + (1,) * field.ndim),
-            req.mesh, req.connectivity, req.gather_mask)
+            req.mesh, req.connectivity, req.gather_mask,
+            table_mode=req.table_mode, table_max_iter=req.table_max_iter)
         return TopologyResult("threshold_sweep", labels=labels,
                               stats=st.as_dict(), tag=req.tag)
     if req.backend == "pure":
@@ -244,7 +263,8 @@ def _submit_sweep(req: TopologyRequest) -> TopologyResult:
                 field > t, req.senders, req.receivers).labels)(thr)
         return TopologyResult("threshold_sweep", labels=labels, tag=req.tag)
     labels, st = distributed_connected_components_graph_batch(
-        field[None] > thr[:, None], req.decomp, req.mesh, req.gather_mask)
+        field[None] > thr[:, None], req.decomp, req.mesh, req.gather_mask,
+        table_mode=req.table_mode, table_max_iter=req.table_max_iter)
     return TopologyResult("threshold_sweep", labels=labels,
                           stats=st.as_dict(), tag=req.tag)
 
