@@ -357,6 +357,52 @@ def serve_throughput(n_requests: int = 24, repeat: int = 3,
           f"evictions={so.cache_evictions};"
           f"queue_peak={so.queue_depth_peak}")
 
+    # (3) overload: the SAME workload shape arriving at overload_factor x
+    # the measured sustainable rate against tight admission budgets and
+    # shed_policy="hopeless" (DESIGN.md §Serve-v3).  The engine attaches to
+    # the open-loop engine's SharedExecutableCache, so it starts warm and
+    # the row measures overload POLICY, not compile cost.  The reject/shed
+    # rates are the bench's overload balance sheet.
+    from repro.serve import PlaneError
+    from repro.serve.workload import overload_trace
+    otrace = overload_trace(n_requests, cfg.shapes, mix=cfg.mix,
+                            connectivity=cfg.connectivity,
+                            sweep_k=cfg.sweep_k, seed=1,
+                            sustainable_rps=sync_warm_rps,
+                            factor=cfg.overload_factor)
+    xeng = AsyncTopologyEngine(min_extent=cfg.min_extent,
+                               max_batch=cfg.max_batch,
+                               slot_cost_cells=cfg.slot_cost_cells or None,
+                               clock=VirtualClock(),
+                               charge_execution_time=True,
+                               max_queue_depth=cfg.overload_queue_depth,
+                               max_inflight_cells=cfg.max_inflight_cells,
+                               shed_policy="hopeless",
+                               default_estimate=1.0 / sync_warm_rps,
+                               compile_cache=oeng.cache, name="overload")
+    t0 = time.perf_counter()
+    ohs = []
+    for req, (t, dl) in zip(otrace.requests(), otrace.arrivals):
+        if t > xeng.clock.now():
+            xeng.advance(t - xeng.clock.now())
+        ohs.append(xeng.submit(req, deadline=dl))
+    xeng.drain()
+    wall_over = time.perf_counter() - t0
+    sx = xeng.stats
+    assert all(h.done() for h in ohs)
+    for h in ohs:
+        assert h.exception() is None or isinstance(h.exception(), PlaneError)
+    assert sx.rejected + sx.shed > 0, (
+        f"{cfg.overload_factor}x overload produced no rejections/sheds")
+    assert sx.completed + sx.failures + sx.shed == sx.requests
+    reject_rate = sx.rejected / n_requests
+    shed_rate = sx.shed / n_requests
+    _emit(f"serve_async_overload_{n_requests}",
+          wall_over / n_requests * 1e6,
+          f"factor={cfg.overload_factor:.0f};completed={sx.completed};"
+          f"reject_rate={reject_rate:.2f};shed_rate={shed_rate:.2f};"
+          f"depth_limited={sx.queue_depth_limit}")
+
     import json
     out = os.path.join(os.getcwd(), "BENCH_serve_async.json")
     with open(out, "w") as f:
@@ -375,6 +421,18 @@ def serve_throughput(n_requests: int = 24, repeat: int = 3,
                     "retry": so.flush_retry},
                 "cache_evictions": so.cache_evictions,
                 "queue_depth_peak": so.queue_depth_peak,
+            },
+            "overload": {
+                "factor": cfg.overload_factor,
+                "completed": sx.completed,
+                "rejected": sx.rejected,
+                "shed": sx.shed,
+                "reject_rate": reject_rate,
+                "shed_rate": shed_rate,
+                "queue_depth_limit": sx.queue_depth_limit,
+                "max_queue_depth": cfg.overload_queue_depth,
+                "shared_cache": xeng.cache.info(),
+                "trace": otrace.as_dict(),
             },
             "trace": trace.as_dict(),
         }, f, indent=2)

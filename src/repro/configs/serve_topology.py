@@ -33,6 +33,12 @@ class ServeTopologyConfig:
     # async plane (open-loop arrivals; DESIGN.md §Serve-v2)
     rate: float = 50.0         # Poisson arrival rate, requests per second
     deadline_slack: float = 0.5  # mean request deadline slack, seconds
+    # overload plane (admission control / shedding; DESIGN.md §Serve-v3)
+    max_queue_depth: int = 1024       # admission budget: queued work items
+    max_inflight_cells: int = 256_000_000  # admission budget: queued cells
+    shed_policy: str = "never"        # "never" | "late" | "hopeless"
+    overload_factor: float = 4.0      # overload smoke: x sustainable rate
+    overload_queue_depth: int = 24    # tight budget used by --overload runs
 
 
 def full_config() -> ServeTopologyConfig:
@@ -43,4 +49,6 @@ def smoke_config() -> ServeTopologyConfig:
     return ServeTopologyConfig(
         name="serve-topology-smoke", max_batch=16,
         shapes=((17, 13, 11), (13, 11, 7), (16, 12, 8)), sweep_k=3,
-        slot_cost_cells=4096, rate=200.0, deadline_slack=0.25)
+        slot_cost_cells=4096, rate=200.0, deadline_slack=0.25,
+        max_queue_depth=256, max_inflight_cells=16_000_000,
+        overload_queue_depth=16)

@@ -13,6 +13,11 @@ Two serving modes share this entry point:
   # Async deadline-aware plane, open-loop arrivals (DESIGN.md §Serve-v2)
   PYTHONPATH=src python -m repro.launch.serve --topology --async --smoke \
       --requests 24
+
+  # Overload smoke: 4x-oversubscribed arrivals against tight admission
+  # budgets; asserts typed rejections/sheds + parity (DESIGN.md §Serve-v3)
+  PYTHONPATH=src python -m repro.launch.serve --topology --async --smoke \
+      --requests 16 --overload
 """
 from __future__ import annotations
 
@@ -131,7 +136,10 @@ def serve_topology_async(args):
         min_extent=cfg.min_extent, max_batch=cfg.max_batch,
         cache_capacity=cfg.cache_capacity,
         slot_cost_cells=cfg.slot_cost_cells or None,
-        clock=VirtualClock(), charge_execution_time=True)
+        clock=VirtualClock(), charge_execution_time=True,
+        max_queue_depth=cfg.max_queue_depth,
+        max_inflight_cells=cfg.max_inflight_cells,
+        shed_policy=cfg.shed_policy)
 
     t0 = time.perf_counter()
     handles = []
@@ -161,12 +169,108 @@ def serve_topology_async(args):
           f"drain={s.flush_drain} retry={s.flush_retry}; "
           f"deadline_hit_rate={s.deadline_hit_rate:.2f}; "
           f"latency p50={p50 * 1e3:.1f}ms p99={p99 * 1e3:.1f}ms (virtual); "
-          f"evictions={s.cache_evictions} queue_peak={s.queue_depth_peak}")
+          f"evictions={s.cache_evictions} queue_peak={s.queue_depth_peak}; "
+          f"rejected={s.rejected} shed={s.shed}")
     print("[serve-async] engine stats:",
           json.dumps(eng.stats.as_dict(), sort_keys=True))
     print("[serve-async] replay trace:",
           json.dumps(trace.as_dict(), sort_keys=True))
     return len(handles) / max(wall, 1e-9)
+
+
+def serve_topology_overload(args):
+    """Overload smoke (DESIGN.md §Serve-v3): measure the sustainable
+    closed-loop rate, then replay an open-loop trace at
+    `cfg.overload_factor` times it against tight admission budgets with
+    `shed_policy="hopeless"`, and assert the overload contract — the
+    remainder is rejected/shed with TYPED errors only (nothing escapes the
+    plane), and every request that did complete is bit-identical to the
+    sequential `submit_many` facade.
+    """
+    from repro.serve import (AsyncTopologyEngine, TopologyEngine,
+                             VirtualClock, PlaneError,
+                             SharedExecutableCache)
+    from repro.serve.workload import overload_trace
+    from repro.topology import submit_many
+
+    mod = configs.get("serve_topology")
+    cfg = mod.smoke_config() if args.smoke else mod.full_config()
+
+    # sustainable rate: warm closed-loop pass on a sync engine attached to
+    # the SAME SharedExecutableCache the overload engine will use — the
+    # measurement pass pays the compiles once and the overload run starts
+    # warm, so its estimates reflect execute cost, not compile cost
+    from repro.serve.workload import synthetic_requests
+    cache = SharedExecutableCache(capacity=cfg.cache_capacity)
+    reqs = synthetic_requests(
+        args.requests, cfg.shapes, mix=cfg.mix,
+        connectivity=cfg.connectivity, sweep_k=cfg.sweep_k, seed=args.seed)
+    sync = TopologyEngine(min_extent=cfg.min_extent, max_batch=cfg.max_batch,
+                          slot_cost_cells=cfg.slot_cost_cells or None,
+                          compile_cache=cache, name="measure")
+    sync.submit_batch(reqs)                       # cold (compiles)
+    t0 = time.perf_counter()
+    sync.submit_batch(reqs)                       # warm
+    sustainable = len(reqs) / max(time.perf_counter() - t0, 1e-9)
+
+    trace = overload_trace(
+        args.requests, cfg.shapes, mix=cfg.mix,
+        connectivity=cfg.connectivity, sweep_k=cfg.sweep_k, seed=args.seed,
+        sustainable_rps=sustainable, factor=cfg.overload_factor)
+    eng = AsyncTopologyEngine(
+        min_extent=cfg.min_extent, max_batch=cfg.max_batch,
+        cache_capacity=cfg.cache_capacity,
+        slot_cost_cells=cfg.slot_cost_cells or None,
+        clock=VirtualClock(), charge_execution_time=True,
+        max_queue_depth=cfg.overload_queue_depth,
+        max_inflight_cells=cfg.max_inflight_cells,
+        shed_policy="hopeless", default_estimate=1.0 / sustainable,
+        compile_cache=cache, name="overload")
+
+    handles = []
+    for req, (t, dl) in zip(trace.requests(), trace.arrivals):
+        if t > eng.clock.now():
+            eng.advance(t - eng.clock.now())
+        handles.append(eng.submit(req, deadline=dl))
+    eng.drain()
+
+    s = eng.stats
+    # the overload contract
+    assert all(h.done() for h in handles)
+    for h in handles:
+        exc = h.exception()
+        assert exc is None or isinstance(exc, PlaneError), \
+            f"non-typed error escaped the plane: {exc!r}"
+    assert s.rejected + s.shed > 0, \
+        f"{cfg.overload_factor}x overload produced no rejections/sheds"
+    assert s.completed + s.failures + s.shed == s.requests
+    assert (s.flush_capacity + s.flush_deadline + s.flush_drain
+            + s.flush_retry == s.batches)
+    completed = [(i, h) for i, h in enumerate(handles)
+                 if h.exception() is None]
+    if completed:
+        want = submit_many([h.request for _, h in completed])
+        for (_, h), w in zip(completed, want):
+            for f in ("labels", "ascending", "descending", "segmentation"):
+                a, b = getattr(h.result(), f), getattr(w, f)
+                assert (a is None) == (b is None)
+                if a is not None:
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+    n = len(handles)
+    print(f"[serve-overload] {n} requests at "
+          f"{cfg.overload_factor:.0f}x sustainable "
+          f"({sustainable:.1f} req/s): completed={s.completed} "
+          f"rejected={s.rejected} (depth-limited={s.queue_depth_limit}) "
+          f"shed={s.shed} failures={s.failures}; "
+          f"parity held on all {len(completed)} completed; "
+          f"shared cache compiles={cache.compiles} "
+          f"(async engine reused {eng.stats.cache_hits})")
+    print("[serve-overload] engine stats:",
+          json.dumps(eng.stats.as_dict(), sort_keys=True))
+    print("[serve-overload] replay trace:",
+          json.dumps(trace.as_dict(), sort_keys=True))
+    return s.rejected + s.shed
 
 
 def main(argv=None):
@@ -193,7 +297,13 @@ def main(argv=None):
     ap.add_argument("--deadline-slack", type=float, default=None,
                     help="async mode: mean deadline slack (s); defaults "
                          "to the config's")
+    ap.add_argument("--overload", action="store_true",
+                    help="async mode: 4x-oversubscribed overload smoke "
+                         "asserting typed rejections/sheds + parity "
+                         "(DESIGN.md §Serve-v3)")
     args = ap.parse_args(argv)
+    if args.topology and args.async_plane and args.overload:
+        return serve_topology_overload(args)
     if args.topology and args.async_plane:
         return serve_topology_async(args)
     if args.topology:

@@ -1,4 +1,5 @@
-"""Batched multi-tenant topology serving (DESIGN.md §Serve / §Serve-v2).
+"""Batched multi-tenant topology serving (DESIGN.md §Serve / §Serve-v2 /
+§Serve-v3).
 
     from repro.serve import TopologyEngine
     from repro.topology import TopologyRequest
@@ -15,14 +16,29 @@ Async plane (queueing, deadline-aware flushing, split-retry, idempotency):
     h = eng.submit(req, deadline=0.5, idempotency_key="tenant-42/9001")
     eng.advance(0.5)      # deadline flush (virtual time)
     h.result()            # bit-identical to repro.topology.submit(req)
+
+Overload plane (admission control, load shedding, shared compiles):
+
+    from repro.serve import SharedExecutableCache, PlaneError
+
+    cache = SharedExecutableCache(capacity=64)
+    eng = AsyncTopologyEngine(max_queue_depth=256, shed_policy="hopeless",
+                              compile_cache=cache, name="replica-0")
+    h = eng.submit(req, deadline=...)
+    if h.done() and isinstance(h.exception(), PlaneError):
+        ...               # Overloaded (rejected) or DeadlineShed (dropped)
 """
 from .engine import (TopologyEngine, AsyncTopologyEngine, TopologyHandle,
-                     EngineStats)
-from .scheduler import FlushScheduler, VirtualClock, MonotonicClock
+                     EngineStats, PlaneError, Overloaded, DeadlineShed)
+from .compile_cache import SharedExecutableCache
+from .scheduler import (FlushScheduler, VirtualClock, MonotonicClock,
+                        COLD_START_ESTIMATE, SHED_POLICIES)
 from .bucketing import (bucket_shape, batch_capacity, remap_flat_labels,
                         merge_adjacent_layouts)
 
 __all__ = ["TopologyEngine", "AsyncTopologyEngine", "TopologyHandle",
-           "EngineStats", "FlushScheduler", "VirtualClock", "MonotonicClock",
+           "EngineStats", "PlaneError", "Overloaded", "DeadlineShed",
+           "SharedExecutableCache", "FlushScheduler", "VirtualClock",
+           "MonotonicClock", "COLD_START_ESTIMATE", "SHED_POLICIES",
            "bucket_shape", "batch_capacity", "remap_flat_labels",
            "merge_adjacent_layouts"]

@@ -91,26 +91,35 @@ def merge_adjacent_layouts(layout_counts: dict, slot_cost_cells: int) -> dict:
     `remap_flat_labels` restores real-extent ids bit-identically); this
     function only decides when it is *cheap*.
 
-    Greedy smallest-first with chain resolution: if L merged into M and M
-    later merged into N, L's items follow to N (the plan is, fittingly,
-    path-compressed before returning).
+    Greedy smallest-first.  The documented ≤2x pad bound (DESIGN.md
+    §Serve-v2) must hold for every ORIGINAL layout, not just the direct
+    edge: when L (already carrying items merged down from smaller layouts)
+    would itself merge into B, each rider's own cells bound B too.  The
+    pre-v3 plan only checked the direct edge, so a path-compressed chain
+    A -> B -> C could transitively land A on cells(C) > 2x cells(A)
+    (satellite bugfix, ISSUE 10); `min_cells` tracks the smallest original
+    member of each live group and vetoes such chains.
     """
     target = {L: L for L in layout_counts}
     if slot_cost_cells is None or slot_cost_cells <= 0:
         return target
     counts = dict(layout_counts)
+    min_cells = {L: math.prod(L) for L in layout_counts}
     for L in sorted(layout_counts, key=lambda s: (math.prod(s), s)):
         best, best_extra = None, None
         for B in layout_counts:
             if target[B] != B or not adjacent_layouts(L, B):
                 continue  # merged-away layouts cannot absorb others
+            if math.prod(B) > 2 * min_cells[L]:
+                continue  # would break the ≤2x bound for a rider on L
             extra = (math.prod(B) - math.prod(L)) * counts[L]
             if best is None or (extra, B) < (best_extra, best):
                 best, best_extra = B, extra
         if best is not None and best_extra < slot_cost_cells:
             target[L] = best
             counts[best] = counts.get(best, 0) + counts.pop(L)
-    for L in target:  # resolve merge chains L -> M -> N
-        while target[target[L]] != target[L]:
-            target[L] = target[target[L]]
-    return target
+            min_cells[best] = min(min_cells[best], min_cells[L])
+    for L in target:  # resolve merge chains L -> M -> N (the min_cells
+        while target[target[L]] != target[L]:  # veto makes this a no-op on
+            target[L] = target[target[L]]      # the pow2 lattice; kept as
+    return target                              # a safety net

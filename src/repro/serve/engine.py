@@ -37,11 +37,20 @@ otherwise be missed, or on `drain()`; a failed bucket execution retries by
 splitting in half so one poisoned request cannot sink its cohort; and
 idempotency-key replays are served from a small result cache.
 
+Serve-v3 (DESIGN.md §Serve-v3) adds the overload story: admission budgets
+(`max_queue_depth` / `max_inflight_cells`) past which `submit()` returns an
+already-failed handle carrying a typed `Overloaded` error, a `shed_policy`
+that drops queued requests whose deadline is unmeetable with a typed
+`DeadlineShed` error before wasting an execution on them, slack-ordered
+deadline flushes, and a `SharedExecutableCache` multiple engines attach to
+so replicas stop paying duplicate compiles.  Typed plane errors surface on
+handles — never as exceptions out of `submit()` / `poll()` / `drain()`.
+
 `EngineStats` aggregates requests/items/batches, executable-cache hits,
 misses and evictions, pad waste, flush reasons (each bucket execution is
 counted under exactly one reason, so the four flush counters always sum to
-`batches`), queue depth, retries/failures, deadline hits, and per-request
-latency sums.
+`batches`), queue depth, rejections/sheds, retries/failures, deadline hits,
+and per-request latency sums.
 """
 from __future__ import annotations
 
@@ -65,10 +74,30 @@ from ..core.distributed import (distributed_connected_components_batch,
                                 distributed_manifold_batch)
 from ..core.distributed_graph import (
     distributed_connected_components_graph_batch)
+from ..core._table import check_converged
 from ..topology import TopologyRequest, TopologyResult
 from .bucketing import (bucket_shape, batch_capacity, pad_to,
                         remap_flat_labels, pad_waste, merge_adjacent_layouts)
-from .scheduler import FlushScheduler, MonotonicClock
+from .compile_cache import SharedExecutableCache
+from .scheduler import FlushScheduler, MonotonicClock, check_shed_policy
+
+
+class PlaneError(Exception):
+    """Base of the typed serving-plane errors.  These surface on handles
+    (`TopologyHandle.exception()`), never as exceptions escaping `submit()`
+    / `poll()` / `drain()` — callers distinguish plane decisions from real
+    execution failures by this type."""
+
+
+class Overloaded(PlaneError):
+    """Admission refused: a budget (`max_queue_depth` /
+    `max_inflight_cells`) would be exceeded.  Nothing was queued; the
+    caller may retry later."""
+
+
+class DeadlineShed(PlaneError):
+    """The request was admitted but dropped by the shed policy because its
+    deadline became unmeetable before it executed."""
 
 
 @dataclasses.dataclass
@@ -95,6 +124,13 @@ class EngineStats:
     completed: int = 0      # handles resolved with a result
     failures: int = 0       # handles resolved with an exception
     dedup_hits: int = 0     # idempotency-key replays served without work
+    # overload plane (DESIGN.md §Serve-v3).  `requests`/`items` count only
+    # ADMITTED work, so after a drain: completed + failures + shed ==
+    # requests, while rejected tracks refused submissions separately.
+    rejected: int = 0       # submissions refused at admission (Overloaded)
+    shed: int = 0           # admitted requests dropped by the shed policy
+    queue_depth_limit: int = 0  # rejections charged to max_queue_depth
+                                # (the rest hit max_inflight_cells)
     deadline_hits: int = 0     # requests completed at or before deadline
     deadline_misses: int = 0   # requests completed after their deadline
     queue_depth_peak: int = 0  # max items queued in the scheduler at once
@@ -174,19 +210,37 @@ class TopologyEngine:
                      smaller layout folds into a dominating one when its
                      modeled extra pad cells stay below this many cells
                      (None/0 disables merging; DESIGN.md §Serve-v2).
+    compile_cache:   a `SharedExecutableCache` to attach to; multiple
+                     engines sharing one compile each executable exactly
+                     once between them (DESIGN.md §Serve-v3).  None builds
+                     a private cache of `cache_capacity` (when a shared
+                     cache is passed, its own capacity governs and
+                     `cache_capacity` is ignored).
+    name:            owner tag for per-engine hit/miss attribution in the
+                     shared cache (auto-numbered when None).
     """
 
     def __init__(self, min_extent: int = 8, max_batch: int = 64,
                  cache_capacity: int | None = 64,
-                 slot_cost_cells: int | None = None):
+                 slot_cost_cells: int | None = None,
+                 compile_cache: SharedExecutableCache | None = None,
+                 name: str | None = None):
         self.min_extent = int(min_extent)
         self.max_batch = int(max_batch)
-        self.cache_capacity = cache_capacity
         self.slot_cost_cells = slot_cost_cells
         self.stats = EngineStats()
-        self._exec = collections.OrderedDict()  # exec key -> (fn, has_stats)
+        self.cache = (compile_cache if compile_cache is not None
+                      else SharedExecutableCache(capacity=cache_capacity))
+        self.cache_capacity = self.cache.capacity
+        self._owner = self.cache.attach(name)
         self._bucket_runs: dict = {}   # exec key -> executions served
-        assert cache_capacity is None or cache_capacity >= 1
+
+    @property
+    def _exec(self):
+        """The (possibly shared) executable store, exec key -> (fn,
+        has_stats).  Kept as a property so pre-v3 call sites (tests,
+        benchmarks) that measure `len(eng._exec)` keep working."""
+        return self.cache._store
 
     # --- public API -----------------------------------------------------------
 
@@ -225,7 +279,9 @@ class TopologyEngine:
                 "size": len(self._exec),
                 "capacity": self.cache_capacity,
                 "hit_rate": self.stats.hit_rate,
-                "runs_per_executable": dict(self._bucket_runs)}
+                "runs_per_executable": dict(self._bucket_runs),
+                "owner": self._owner,
+                "shared": self.cache.info()}
 
     # --- request expansion ----------------------------------------------------
 
@@ -328,21 +384,18 @@ class TopologyEngine:
         return bkey + (capacity, str(it.payload.dtype))
 
     def _get_executable(self, ekey: tuple, it0: _WorkItem):
-        """LRU lookup-or-build; the cache never holds more than
-        `cache_capacity` executables (evictions are counted, and an evicted
-        layout simply recompiles on its next use — bit-identical, pinned by
-        tests/test_serve_async.py)."""
-        hit = self._exec.get(ekey)
-        if hit is not None:
+        """Lookup-or-build through the (possibly shared) LRU cache; it
+        never holds more than its capacity (evictions are counted, and an
+        evicted layout simply recompiles on its next use — bit-identical,
+        pinned by tests/test_serve_async.py).  Hits/misses land both on
+        this engine's stats and on its attribution row in the cache."""
+        built, hit, evicted = self.cache.lookup(
+            ekey, lambda: self._build_executable(it0), self._owner)
+        if hit:
             self.stats.cache_hits += 1
-            self._exec.move_to_end(ekey)
-            return hit
-        self.stats.cache_misses += 1
-        built = self._build_executable(it0)
-        self._exec[ekey] = built
-        if self.cache_capacity and len(self._exec) > self.cache_capacity:
-            self._exec.popitem(last=False)
-            self.stats.cache_evictions += 1
+        else:
+            self.stats.cache_misses += 1
+        self.stats.cache_evictions += evicted
         return built
 
     def _build_executable(self, it: _WorkItem):
@@ -432,6 +485,18 @@ class TopologyEngine:
             out = self._execute(fn, group, (jnp.asarray(stack),))
         labels, stats = out if has_stats else (out, None)
         labels = np.asarray(jax.block_until_ready(labels))
+
+        # the executables run under jit, where check_converged is a no-op
+        # (tracers cannot be inspected), so a too-small table_max_iter
+        # would silently hand back mid-chain labels; re-check host-side on
+        # the materialized per-slot flags (only real slots — pad slots may
+        # legitimately not converge).  Raising here composes with the async
+        # split-retry: the bisection isolates exactly the non-converged
+        # requests onto their own handles.
+        if stats is not None and "converged" in getattr(stats, "_fields", ()):
+            check_converged(np.asarray(stats.converged)[:len(group)],
+                            "boundary table resolution (serve bucket "
+                            f"{bkey[1]}/{it0.kind})", it0.table_max_iter)
 
         for pos, g in enumerate(group):
             lab = (remap_flat_labels(labels[pos], padded, g.payload.shape)
@@ -535,20 +600,38 @@ class AsyncTopologyEngine(TopologyEngine):
 
     clock:  time source for deadlines/latencies — `MonotonicClock` by
             default, a `VirtualClock` for deterministic tests.
+    default_estimate:  cold-start execute estimate for never-measured
+            buckets; None picks `scheduler.COLD_START_ESTIMATE` (an
+            explicit 0.0 restores "flush exactly at the deadline").
     charge_execution_time:  advance a virtual clock by the measured wall
             duration of each execution (virtual-time open-loop benchmarks).
     result_cache_capacity:  LRU bound on cached idempotency-key results.
+    max_queue_depth:  admission budget on queued work items; a submission
+            that would exceed it returns a rejected handle with a typed
+            `Overloaded` error (None = unbounded, the pre-v3 behavior).
+    max_inflight_cells:  admission budget on queued payload cells (the
+            memory-shaped analogue of queue depth; None = unbounded).
+    shed_policy:  "never" (default) keeps every admitted request;
+            "late" sheds queued requests whose deadline already passed;
+            "hopeless" also sheds those the execute estimate says cannot
+            finish in time.  Shed handles fail with `DeadlineShed`.
     """
 
     def __init__(self, min_extent: int = 8, max_batch: int = 64,
                  cache_capacity: int | None = 64,
                  slot_cost_cells: int | None = None, clock=None,
-                 default_estimate: float = 0.0,
+                 default_estimate: float | None = None,
                  charge_execution_time: bool = False,
-                 result_cache_capacity: int = 256):
+                 result_cache_capacity: int = 256,
+                 max_queue_depth: int | None = None,
+                 max_inflight_cells: int | None = None,
+                 shed_policy: str = "never",
+                 compile_cache: SharedExecutableCache | None = None,
+                 name: str | None = None):
         super().__init__(min_extent=min_extent, max_batch=max_batch,
                          cache_capacity=cache_capacity,
-                         slot_cost_cells=slot_cost_cells)
+                         slot_cost_cells=slot_cost_cells,
+                         compile_cache=compile_cache, name=name)
         self.clock = clock if clock is not None else MonotonicClock()
         self.scheduler = FlushScheduler(capacity=self.max_batch,
                                         clock=self.clock,
@@ -556,6 +639,12 @@ class AsyncTopologyEngine(TopologyEngine):
         self._charge = (bool(charge_execution_time)
                         and hasattr(self.clock, "advance"))
         self.result_cache_capacity = int(result_cache_capacity)
+        self.max_queue_depth = (None if max_queue_depth is None
+                                else int(max_queue_depth))
+        self.max_inflight_cells = (None if max_inflight_cells is None
+                                   else int(max_inflight_cells))
+        self.shed_policy = check_shed_policy(shed_policy)
+        self._inflight_cells = 0    # payload cells currently queued
         self._rid = itertools.count()
         self._pending: dict = {}    # rid -> _Pending
         self._outputs: dict = {}    # (rid, role) -> (labels, stats)
@@ -571,9 +660,13 @@ class AsyncTopologyEngine(TopologyEngine):
         `submit_batch` for the synchronous path).  `deadline` is an absolute
         clock time the request should complete by; `idempotency_key` replays
         are deduplicated against in-flight requests and a bounded result
-        cache without executing anything."""
+        cache without executing anything.  Past an admission budget the
+        handle comes back already failed with `Overloaded` — submit never
+        raises for overload (typed plane errors stay on handles)."""
         request.validate()
         if idempotency_key is not None:
+            # dedup before admission: replays cost no queue space, so they
+            # are served even when the plane is refusing new work
             cached = self._results.get(idempotency_key)
             if cached is not None:
                 self.stats.dedup_hits += 1
@@ -587,9 +680,19 @@ class AsyncTopologyEngine(TopologyEngine):
                 return self._inflight[idempotency_key]
 
         rid = next(self._rid)
+        items = self._expand(rid, request)
+        refusal = self._admission_error(items)
+        if refusal is not None:
+            # rejected: nothing queued, no rid book-keeping, not counted
+            # in requests/items — the handle carries the typed error
+            self.stats.rejected += 1
+            h = TopologyHandle(self, request, deadline, idempotency_key)
+            h.submitted_at = h.completed_at = self.clock.now()
+            h._exc, h._done = refusal, True
+            return h
+
         handle = TopologyHandle(self, request, deadline, idempotency_key)
         handle.submitted_at = self.clock.now()
-        items = self._expand(rid, request)
         self.stats.requests += 1
         self.stats.items += len(items)
         self._pending[rid] = _Pending(handle, request,
@@ -598,20 +701,42 @@ class AsyncTopologyEngine(TopologyEngine):
             self._inflight[idempotency_key] = handle
         for it in items:
             self.scheduler.enqueue(self._bucket_key(it), it, deadline)
+            self._inflight_cells += int(it.payload.size)
         self.stats.queue_depth_peak = max(self.stats.queue_depth_peak,
                                           self.scheduler.depth())
+        self._shed_pass()   # a hopeless submission sheds before any flush
         for key in self.scheduler.full():
             self._flush(key, "capacity")
         self.poll()
         return handle
 
+    def _admission_error(self, items) -> Overloaded | None:
+        """The typed refusal this submission would get, or None to admit."""
+        if self.max_queue_depth is not None:
+            depth = self.scheduler.depth()
+            if depth + len(items) > self.max_queue_depth:
+                self.stats.queue_depth_limit += 1
+                return Overloaded(
+                    f"queue depth {depth} + {len(items)} items would exceed "
+                    f"max_queue_depth={self.max_queue_depth}")
+        if self.max_inflight_cells is not None:
+            cells = sum(int(it.payload.size) for it in items)
+            if self._inflight_cells + cells > self.max_inflight_cells:
+                return Overloaded(
+                    f"queued payload {self._inflight_cells} + {cells} cells "
+                    f"would exceed max_inflight_cells="
+                    f"{self.max_inflight_cells}")
+        return None
+
     # --- flush triggers -------------------------------------------------------
 
     def poll(self) -> int:
-        """Flush every bucket whose earliest deadline would be missed by
-        waiting longer; returns the number of buckets flushed.  Call after
-        time passes (a `VirtualClock` advance, or periodically on a real
-        clock)."""
+        """Shed what the policy says is unmeetable, then flush every bucket
+        whose earliest deadline would be missed by waiting longer (in slack
+        order — most overdue first); returns the number of buckets flushed.
+        Call after time passes (a `VirtualClock` advance, or periodically
+        on a real clock)."""
+        self._shed_pass()
         flushed = 0
         for key in self.scheduler.due():
             self._flush(key, "deadline")
@@ -627,7 +752,9 @@ class AsyncTopologyEngine(TopologyEngine):
         """Flush everything queued (end of a burst / shutdown).  Drain is
         the one flush with a global view, so the cost-model layout merge
         applies here (capacity/deadline flushes act on single buckets)."""
+        self._shed_pass()
         popped = self.scheduler.pop_all()
+        self._uncharge(e for v in popped.values() for e in v)
         buckets = {k: [e.item for e in v] for k, v in popped.items()}
         buckets = self._merge_grid_buckets(buckets)
         for key, group in buckets.items():
@@ -637,10 +764,49 @@ class AsyncTopologyEngine(TopologyEngine):
         """Requests admitted but not yet resolved."""
         return len(self._pending)
 
+    # --- load shedding --------------------------------------------------------
+
+    def _uncharge(self, entries) -> None:
+        """Release the inflight-cells admission budget for entries leaving
+        the queue (flush, drain, shed, or sibling purge)."""
+        for e in entries:
+            self._inflight_cells -= int(e.item.payload.size)
+
+    def _shed_pass(self) -> int:
+        """Apply the shed policy: drop queued entries whose deadline is
+        unmeetable, fail their requests with a typed `DeadlineShed`, and
+        purge each shed request's sibling items from other buckets so no
+        execution is wasted on a request that can no longer succeed.
+        Returns the number of requests shed."""
+        if self.shed_policy == "never":
+            return 0
+        dropped = self.scheduler.shed(self.shed_policy)
+        if not dropped:
+            return 0
+        self._uncharge(e for _, e in dropped)
+        now = self.clock.now()
+        by_rid: dict = {}
+        for key, e in dropped:
+            by_rid.setdefault(e.item.req_idx, (key, e))
+        n = 0
+        for rid in sorted(by_rid):
+            key, e = by_rid[rid]
+            self._uncharge(self.scheduler.purge(
+                lambda it, rid=rid: it.req_idx == rid))
+            exc = DeadlineShed(
+                f"deadline {e.deadline:.6f} unmeetable at t={now:.6f} "
+                f"(bucket estimate {self.scheduler.estimate(key):.6f}s, "
+                f"shed_policy={self.shed_policy!r})")
+            self._fail_request(rid, exc, counter="shed")
+            n += 1
+        return n
+
     # --- execution with split-retry -------------------------------------------
 
     def _flush(self, key, reason: str) -> None:
-        group = [e.item for e in self.scheduler.pop(key)]
+        entries = self.scheduler.pop(key)
+        self._uncharge(entries)
+        group = [e.item for e in entries]
         if group:
             self._execute_group(key, group, reason)
 
@@ -712,14 +878,21 @@ class AsyncTopologyEngine(TopologyEngine):
                 self._results.popitem(last=False)
 
     def _fail(self, item: _WorkItem, exc: BaseException) -> None:
-        rec = self._pending.pop(item.req_idx, None)
+        self._fail_request(item.req_idx, exc)
+
+    def _fail_request(self, rid: int, exc: BaseException,
+                      counter: str = "failures") -> None:
+        """Resolve a request's handle with an exception, charged to the
+        given stats counter ("failures" for execution errors, "shed" for
+        policy drops)."""
+        rec = self._pending.pop(rid, None)
         if rec is None or rec.handle._done:
             return
         rec.handle._exc, rec.handle._done = exc, True
         rec.handle.completed_at = self.clock.now()
-        self.stats.failures += 1
+        setattr(self.stats, counter, getattr(self.stats, counter) + 1)
         for role in rec.need:   # drop any sibling outputs already produced
-            self._outputs.pop((item.req_idx, role), None)
+            self._outputs.pop((rid, role), None)
         if rec.handle.idempotency_key is not None:
             # failures are never cached: a replayed key re-executes
             self._inflight.pop(rec.handle.idempotency_key, None)

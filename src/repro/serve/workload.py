@@ -145,3 +145,25 @@ def synthetic_trace(n_requests: int, shapes, mix=None, connectivity=6,
                          mix=tuple(mix or _DEFAULT_MIX),
                          connectivity=int(connectivity),
                          sweep_k=int(sweep_k), arrivals=arrivals)
+
+
+def overload_trace(n_requests: int, shapes, mix=None, connectivity=6,
+                   sweep_k: int = 4, *, seed: int, sustainable_rps: float,
+                   factor: float = 4.0,
+                   deadline_periods: float = 2.0) -> WorkloadTrace:
+    """An oversubscribed open-loop trace for exercising admission control
+    and load shedding (DESIGN.md §Serve-v3): Poisson arrivals at `factor`
+    times a measured sustainable rate, with deadlines about
+    `deadline_periods` mean service periods out — tight enough that a
+    `factor`x backlog makes many of them unmeetable.  `sustainable_rps`
+    should come from a measurement (e.g. the warm closed-loop rate of the
+    `serve_throughput` bench); everything else is deterministic in `seed`,
+    so the SAME trace value replays the same overload anywhere."""
+    if sustainable_rps <= 0:
+        raise ValueError(f"sustainable_rps must be > 0, "
+                         f"got {sustainable_rps}")
+    return synthetic_trace(
+        n_requests, shapes, mix=mix, connectivity=connectivity,
+        sweep_k=sweep_k, seed=seed,
+        rate=float(factor) * float(sustainable_rps),
+        deadline_slack=float(deadline_periods) / float(sustainable_rps))

@@ -11,6 +11,7 @@ suites.  All timing runs on the injected `VirtualClock`, so every flush
 sequence in this file is exactly reproducible.
 """
 import json
+import math
 import os
 import subprocess
 import sys
@@ -188,7 +189,9 @@ def test_deadline_flush_exactly_at_deadline():
     assert not h.done() and eng.pending() == 1
     eng.advance(4.9)
     assert not h.done() and eng.stats.flush_deadline == 0
-    eng.advance(0.1)     # virtual estimate is 0 -> flush exactly at 5.0
+    # the cold-start estimate (0.05) pulls flush_at to 4.95; the next
+    # advance crosses it and the request still completes by its deadline
+    eng.advance(0.1)
     assert h.done() and eng.stats.flush_deadline == 1
     assert eng.stats.deadline_hits == 1 and eng.stats.deadline_misses == 0
     assert h.completed_at == 5.0 and eng.latencies == [5.0]
@@ -388,10 +391,22 @@ def test_merge_plan_cost_threshold():
         {(8, 8): (8, 8), (16, 8): (16, 8)}
 
 
-def test_merge_plan_resolves_chains():
+def test_merge_plan_chains_respect_pad_bound():
+    # regression (ISSUE 10): pre-v3 this 3-layout chain path-compressed to
+    # (8,) -> (16,) -> (32,), executing (8,) at 4x its cells and violating
+    # the documented <=2x pad bound (DESIGN.md §Serve-v2).  The bound now
+    # holds for every ORIGINAL layout along the chain: (16,) cannot absorb
+    # the group carrying (8,), so the chain stops at (16,).
     plan = merge_adjacent_layouts({(8,): 1, (16,): 1, (32,): 1},
                                   slot_cost_cells=10**6)
-    assert plan == {(8,): (32,), (16,): (32,), (32,): (32,)}
+    assert plan == {(8,): (16,), (16,): (16,), (32,): (32,)}
+    assert all(math.prod(tgt) <= 2 * math.prod(orig)
+               for orig, tgt in plan.items())
+    # a longer lattice run: the bound holds pairwise along the whole chain
+    plan = merge_adjacent_layouts({(8,): 5, (16,): 5, (32,): 5, (64,): 5},
+                                  slot_cost_cells=10**6)
+    assert all(math.prod(tgt) <= 2 * math.prod(orig)
+               for orig, tgt in plan.items())
 
 
 def test_engine_merges_adjacent_buckets_bit_identically():
@@ -512,6 +527,22 @@ _ASYNC_DIST_WORKER = textwrap.dedent("""
     assert (s.flush_capacity + s.flush_deadline + s.flush_drain
             + s.flush_retry) == s.batches
     assert s.deadline_hits == 2
+
+    # serve-v3 bugfix sweep: the engine's executables run under jit, where
+    # check_converged is a no-op — the host-side re-check must surface a
+    # too-small table_max_iter as a RuntimeError on the handle instead of
+    # silently returning mid-chain labels
+    bad = TopologyRequest("cc", backend="distributed", mesh=mesh,
+                          connectivity=4, table_max_iter=1,
+                          mask=jnp.asarray(rng.random((9, 7)) < 0.6),
+                          tag="bad")
+    hb = eng.submit(bad)
+    eng.drain()
+    assert hb.done() and isinstance(hb.exception(), RuntimeError)
+    assert "max_iter" in str(hb.exception())
+    assert s.failures == 1
+    assert (s.flush_capacity + s.flush_deadline + s.flush_drain
+            + s.flush_retry) == s.batches
     print("ASYNC_DIST_OK", s.batches)
 """)
 

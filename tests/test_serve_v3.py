@@ -1,0 +1,441 @@
+"""Serving plane v3: admission control, slack-ordered scheduling, load
+shedding, and the shared compile cache (DESIGN.md §Serve-v3).
+
+The overload contract pinned here: past the admission budgets `submit()`
+returns already-failed handles with typed `Overloaded` errors (never an
+exception out of the plane), queued requests whose deadline became
+unmeetable are shed with typed `DeadlineShed` errors before wasting an
+execution, deadline flushes run in slack order, and engines attached to
+one `SharedExecutableCache` compile each executable exactly once between
+them.  Every request that is NOT shed or rejected stays bit-identical to
+the sequential `repro.topology.submit_many` path.  All timing runs on the
+injected `VirtualClock`, so every policy decision in this file is exactly
+reproducible.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.ids import compute_order
+from repro.topology import TopologyRequest, submit_many
+from repro.serve import (TopologyEngine, AsyncTopologyEngine, FlushScheduler,
+                         VirtualClock, SharedExecutableCache, PlaneError,
+                         Overloaded, DeadlineShed, COLD_START_ESTIMATE)
+from repro.serve.workload import overload_trace
+
+
+def _assert_results_equal(got, want):
+    assert got.query == want.query and got.tag == want.tag
+    for f in ("labels", "ascending", "descending", "segmentation"):
+        a, b = getattr(got, f), getattr(want, f)
+        assert (a is None) == (b is None), f
+        if a is not None:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f)
+
+
+def _flush_sum(stats):
+    return (stats.flush_capacity + stats.flush_deadline + stats.flush_drain
+            + stats.flush_retry)
+
+
+def _cc(rng, shape=(9, 7), tag=None):
+    return TopologyRequest("cc", mask=jnp.asarray(rng.random(shape) < 0.6),
+                           connectivity=4, tag=tag)
+
+
+def _ms(rng, shape=(9, 7), tag=None):
+    field = jnp.asarray(rng.standard_normal(shape))
+    return TopologyRequest("ms", order=compute_order(field), connectivity=4,
+                           tag=tag)
+
+
+# --- scheduler: cold-start estimate (satellite bugfix) ------------------------
+
+
+def test_cold_start_flush_is_earlier_than_deadline():
+    # regression (ISSUE 10): with the old default_estimate=0.0 a
+    # never-measured bucket's flush_at equalled its earliest deadline, so
+    # the FIRST request in every bucket flushed exactly AT its deadline
+    # and missed it by the execution time
+    clk = VirtualClock()
+    sch = FlushScheduler(capacity=64, clock=clk)
+    sch.enqueue("k", "first", deadline=1.0)
+    assert sch.estimate("k") == COLD_START_ESTIMATE > 0.0
+    assert sch.flush_at("k") == 1.0 - COLD_START_ESTIMATE < 1.0
+    # an explicit 0.0 restores the legacy flush-at-deadline behavior
+    legacy = FlushScheduler(capacity=64, clock=clk, default_estimate=0.0)
+    legacy.enqueue("k", "first", deadline=1.0)
+    assert legacy.flush_at("k") == 1.0
+
+
+def test_global_ewma_seeds_cold_buckets():
+    sch = FlushScheduler(capacity=64, clock=VirtualClock())
+    sch.observe("a", 0.2)
+    sch.observe("b", 0.4)
+    # a cold bucket on a warm plane estimates like its peers (global EWMA
+    # over all observations: 0.5*0.4 + 0.5*0.2), not the cold default
+    assert sch.estimate("never-seen") == pytest.approx(0.3)
+    assert sch.estimate("a") == pytest.approx(0.2)     # per-key wins
+    assert sch.estimate("b") == pytest.approx(0.4)
+
+
+# --- scheduler: slack ordering / shedding -------------------------------------
+
+
+def test_due_is_slack_ordered():
+    clk = VirtualClock()
+    sch = FlushScheduler(capacity=64, clock=clk)
+    sch.enqueue("x", 1, deadline=5.0)
+    sch.enqueue("y", 1, deadline=3.0)
+    sch.enqueue("z", 1, deadline=4.0)
+    clk.advance(10.0)
+    # all overdue; most negative slack (earliest flush_at) first, not dict
+    # insertion order
+    assert sch.due() == ["y", "z", "x"]
+    assert sch.slack("y") < sch.slack("z") < sch.slack("x") < 0
+
+
+def test_shed_policies():
+    def fresh():
+        clk = VirtualClock()
+        sch = FlushScheduler(capacity=64, clock=clk)
+        sch.enqueue("k", "missed", deadline=1.0)      # already late at t=2
+        sch.enqueue("k", "doomed", deadline=3.5)      # unmeetable: 2+2>3.5
+        sch.enqueue("k", "fine", deadline=10.0)
+        sch.enqueue("k", "nodeadline")
+        sch.observe("k", 2.0)
+        clk.advance(2.0)
+        return sch
+
+    sch = fresh()
+    assert sch.shed("never") == [] and sch.depth() == 4
+    sch = fresh()
+    assert [e.item for _, e in sch.shed("late")] == ["missed"]
+    assert sch.depth() == 3
+    sch = fresh()
+    assert [e.item for _, e in sch.shed("hopeless")] == ["missed", "doomed"]
+    assert sch.depth() == 2
+    with pytest.raises(ValueError):
+        sch.shed("aggressive")
+
+
+def test_scheduler_purge():
+    sch = FlushScheduler(capacity=64, clock=VirtualClock())
+    sch.enqueue("a", ("r0", 0))
+    sch.enqueue("a", ("r1", 0))
+    sch.enqueue("b", ("r0", 1))
+    out = sch.purge(lambda item: item[0] == "r0")
+    assert sorted(e.item for e in out) == [("r0", 0), ("r0", 1)]
+    assert sch.depth() == 1 and "b" not in sch.depths()
+
+
+# --- scheduler: property-based random ops (satellite test coverage) -----------
+
+
+def test_scheduler_property_random_ops():
+    """Seeded random enqueue/advance/observe sequences: due() never
+    returns an empty or non-overdue bucket, slack ordering is monotone,
+    and shed() drops exactly the policy-unmeetable entries."""
+    for seed in range(6):
+        rng = np.random.default_rng(7000 + seed)
+        clk = VirtualClock()
+        sch = FlushScheduler(capacity=4, clock=clk)
+        keys = ["a", "b", "c", "d"]
+        for step in range(300):
+            op = rng.random()
+            if op < 0.5:
+                dl = (None if rng.random() < 0.3
+                      else float(clk.now() + rng.uniform(0.01, 2.0)))
+                sch.enqueue(keys[int(rng.integers(4))], ("item", step), dl)
+            elif op < 0.8:
+                clk.advance(float(rng.uniform(0.0, 1.0)))
+            else:
+                sch.observe(keys[int(rng.integers(4))],
+                            float(rng.uniform(0.0, 0.5)))
+            due = sch.due()
+            slacks = []
+            for k in due:
+                assert sch.depths().get(k), "due() returned an empty bucket"
+                t = sch.flush_at(k)
+                assert t is not None and clk.now() >= t, \
+                    "due() returned a non-overdue bucket"
+                slacks.append(sch.slack(k))
+            assert slacks == sorted(slacks), "slack ordering not monotone"
+            if rng.random() < 0.3:
+                for k in due:
+                    sch.pop(k)
+        now = clk.now()
+        dropped = sch.shed("hopeless")
+        for k, e in dropped:
+            assert e.deadline is not None
+            assert now + sch.estimate(k) > e.deadline
+        for k, n in sch.depths().items():   # survivors are all meetable
+            for e in sch._queues[k]:
+                assert (e.deadline is None
+                        or now + sch.estimate(k) <= e.deadline)
+
+
+# --- engine: admission control ------------------------------------------------
+
+
+def test_admission_rejects_with_typed_overloaded():
+    rng = np.random.default_rng(0)
+    eng = AsyncTopologyEngine(min_extent=8, max_batch=64,
+                              clock=VirtualClock(), max_queue_depth=2)
+    h0 = eng.submit(_cc(rng, tag=0), deadline=100.0)
+    h1 = eng.submit(_cc(rng, tag=1), deadline=100.0)
+    h2 = eng.submit(_cc(rng, tag=2), deadline=100.0)   # 2+1 > 2: rejected
+    assert h2.done() and isinstance(h2.exception(), Overloaded)
+    with pytest.raises(Overloaded):
+        h2.result()
+    s = eng.stats
+    assert s.rejected == 1 and s.queue_depth_limit == 1
+    assert s.requests == 2, "rejected submissions are not admitted requests"
+    eng.drain()
+    assert h0.exception() is None and h1.exception() is None
+    want = submit_many([h0.request, h1.request])
+    _assert_results_equal(h0.result(), want[0])
+    _assert_results_equal(h1.result(), want[1])
+    assert s.completed + s.failures + s.shed == s.requests
+    # the queue drained: the next submission is admitted again
+    h3 = eng.submit(_cc(rng, tag=3))
+    eng.drain()
+    assert h3.exception() is None and s.rejected == 1
+
+
+def test_admission_rejects_on_inflight_cells():
+    rng = np.random.default_rng(1)
+    eng = AsyncTopologyEngine(min_extent=8, max_batch=64,
+                              clock=VirtualClock(),
+                              max_inflight_cells=100)   # (9,7) = 63 cells
+    h0 = eng.submit(_cc(rng, tag=0))
+    h1 = eng.submit(_cc(rng, tag=1))       # 63+63 > 100: rejected
+    assert h1.done() and isinstance(h1.exception(), Overloaded)
+    assert "max_inflight_cells" in str(h1.exception())
+    s = eng.stats
+    assert s.rejected == 1 and s.queue_depth_limit == 0
+    eng.drain()
+    assert eng._inflight_cells == 0, "flushes must release the cell budget"
+    h2 = eng.submit(_cc(rng, tag=2))       # budget released: admitted
+    eng.drain()
+    assert h2.exception() is None
+
+
+# --- engine: load shedding ----------------------------------------------------
+
+
+def test_shed_late_fails_handle_with_deadline_shed():
+    rng = np.random.default_rng(2)
+    eng = AsyncTopologyEngine(min_extent=8, max_batch=64,
+                              clock=VirtualClock(), shed_policy="late")
+    h = eng.submit(_ms(rng, tag="ms"), deadline=1.0)    # expands to 2 items
+    h2 = eng.submit(_cc(rng, tag="cc"), deadline=50.0)
+    assert not h.done() and not h2.done()
+    eng.advance(2.0)        # past h's deadline: shed BOTH its items, once
+    assert h.done() and isinstance(h.exception(), DeadlineShed)
+    with pytest.raises(DeadlineShed):
+        h.result()
+    s = eng.stats
+    assert s.shed == 1 and s.batches == 0, \
+        "shedding must not cost an execution"
+    assert not h2.done()
+    eng.drain()
+    assert h2.exception() is None
+    _assert_results_equal(h2.result(), submit_many([h2.request])[0])
+    assert s.completed + s.failures + s.shed == s.requests == 2
+    assert eng._inflight_cells == 0
+
+
+def test_shed_hopeless_uses_estimate_never_keeps():
+    rng = np.random.default_rng(3)
+    # estimate 2.0 makes a 1.0-deadline hopeless at submit time
+    eng = AsyncTopologyEngine(min_extent=8, max_batch=64,
+                              clock=VirtualClock(), shed_policy="hopeless",
+                              default_estimate=2.0)
+    h = eng.submit(_cc(rng, tag=0), deadline=1.0)
+    assert h.done() and isinstance(h.exception(), DeadlineShed)
+    assert "shed_policy='hopeless'" in str(h.exception())
+    # same setup under "never": the overdue flush_at fires immediately
+    # instead, and the request COMPLETES (late, but bit-identical)
+    keep = AsyncTopologyEngine(min_extent=8, max_batch=64,
+                               clock=VirtualClock(), shed_policy="never",
+                               default_estimate=2.0)
+    hk = keep.submit(_cc(rng, tag=1), deadline=1.0)
+    assert hk.done() and hk.exception() is None
+    _assert_results_equal(hk.result(), submit_many([hk.request])[0])
+    assert keep.stats.shed == 0 and keep.stats.deadline_misses == 0
+
+
+# --- engine: deadline flushes follow slack ------------------------------------
+
+
+def test_deadline_flush_order_follows_slack():
+    rng = np.random.default_rng(4)
+    eng = AsyncTopologyEngine(min_extent=8, max_batch=64,
+                              clock=VirtualClock())
+    eng.submit(_cc(rng, shape=(9, 7), tag="loose"), deadline=5.0)
+    eng.submit(_cc(rng, shape=(6, 5), tag="tight"), deadline=3.0)
+    eng.clock.advance(10.0)
+    order = eng.scheduler.due()
+    assert len(order) == 2
+    assert eng.scheduler.earliest_deadline(order[0]) == 3.0, \
+        "the tighter-slack bucket must flush first"
+    assert eng.scheduler.earliest_deadline(order[1]) == 5.0
+    assert eng.poll() == 2
+
+
+# --- shared compile cache -----------------------------------------------------
+
+
+def test_shared_cache_compiles_each_executable_once():
+    rng = np.random.default_rng(5)
+    reqs = [_cc(rng, tag=i) for i in range(3)]
+    want = submit_many(reqs)
+    cache = SharedExecutableCache(capacity=None)
+
+    e1 = AsyncTopologyEngine(min_extent=8, max_batch=4, clock=VirtualClock(),
+                             compile_cache=cache, name="r0")
+    hs1 = [e1.submit(r) for r in reqs]
+    e1.drain()
+    compiles = cache.compiles
+    assert compiles >= 1 and e1.stats.cache_misses == compiles
+
+    # a second async replica on the SAME cache: zero new compiles
+    e2 = AsyncTopologyEngine(min_extent=8, max_batch=4, clock=VirtualClock(),
+                             compile_cache=cache, name="r1")
+    hs2 = [e2.submit(r) for r in reqs]
+    e2.drain()
+    assert cache.compiles == compiles, "replica recompiled a shared layout"
+    assert e2.stats.cache_misses == 0 and e2.stats.cache_hits >= 1
+
+    # ... and the SYNC engine shares the same executables
+    e3 = TopologyEngine(min_extent=8, max_batch=4, compile_cache=cache,
+                        name="sync")
+    got3 = e3.submit_batch(reqs)
+    assert cache.compiles == compiles
+    assert e3.stats.cache_misses == 0
+
+    # attribution stays per engine even though the store is shared
+    att = cache.attribution()
+    assert att["r0"]["misses"] == compiles
+    assert att["r1"]["misses"] == 0 and att["r1"]["hits"] >= 1
+    assert att["sync"]["misses"] == 0 and att["sync"]["hits"] >= 1
+    assert len(cache) == compiles     # no evictions at capacity=None
+    assert len(e1._exec) == len(e2._exec) == len(cache)
+
+    for h1, h2, g3, w in zip(hs1, hs2, got3, want):
+        _assert_results_equal(h1.result(), w)
+        _assert_results_equal(h2.result(), w)
+        _assert_results_equal(g3, w)
+
+
+def test_private_caches_stay_independent():
+    rng = np.random.default_rng(6)
+    req = _cc(rng, tag=0)
+    a = TopologyEngine(min_extent=8, max_batch=4)
+    b = TopologyEngine(min_extent=8, max_batch=4)
+    a.submit_batch([req])
+    b.submit_batch([req])
+    # without a shared cache each engine pays its own compile (the pre-v3
+    # behavior, unchanged by default)
+    assert a.stats.cache_misses == 1 and b.stats.cache_misses == 1
+    assert a.cache is not b.cache
+
+
+# --- acceptance: 4x-oversubscribed open-loop trace ----------------------------
+
+
+def test_overload_acceptance_4x_oversubscribed():
+    """ISSUE 10 acceptance: under a 4x-oversubscribed open-loop trace on a
+    VirtualClock, every admitted request completes bit-identically to
+    sequential submit_many, the remainder is shed/rejected with typed
+    errors (none escape the plane), flush order follows deadline slack,
+    and two engines attached to one SharedExecutableCache compile each
+    executable exactly once."""
+    trace = overload_trace(24, ((9, 7), (6, 5)),
+                           mix=(("cc", 0.7), ("ms", 0.3)), connectivity=4,
+                           seed=7, sustainable_rps=40.0, factor=4.0)
+    cache = SharedExecutableCache(capacity=None)
+
+    def run(name, policy="hopeless"):
+        eng = AsyncTopologyEngine(min_extent=8, max_batch=4,
+                                  clock=VirtualClock(), max_queue_depth=6,
+                                  shed_policy=policy,
+                                  compile_cache=cache, name=name)
+        due_orders = []
+        orig_due = eng.scheduler.due
+
+        def spying_due():
+            keys = orig_due()
+            due_orders.append([eng.scheduler.slack(k) for k in keys])
+            return keys
+
+        eng.scheduler.due = spying_due
+        handles = []
+        for req, (t, dl) in zip(trace.requests(), trace.arrivals):
+            if t > eng.clock.now():
+                eng.advance(t - eng.clock.now())
+            handles.append(eng.submit(req, deadline=dl))
+            assert _flush_sum(eng.stats) == eng.stats.batches
+        eng.drain()
+        assert _flush_sum(eng.stats) == eng.stats.batches
+        return eng, handles, due_orders
+
+    eng1, hs1, due1 = run("r0")
+    compiles = cache.compiles
+    assert compiles >= 1
+    s = eng1.stats
+
+    # typed errors only — nothing escapes the plane
+    for h in hs1:
+        assert h.done()
+        assert h.exception() is None or isinstance(h.exception(), PlaneError)
+    assert s.rejected > 0, "4x overload against depth=6 must reject"
+    assert s.shed > 0, "hopeless policy under 4x overload must shed"
+    assert s.completed > 0, "overload must not starve everything"
+    assert s.failures == 0
+    assert s.completed + s.shed + s.failures == s.requests
+    assert s.rejected == sum(isinstance(h.exception(), Overloaded)
+                             for h in hs1)
+    assert s.shed == sum(isinstance(h.exception(), DeadlineShed)
+                         for h in hs1)
+
+    # bit-parity for every admitted-and-completed request
+    completed = [h for h in hs1 if h.exception() is None]
+    want = submit_many([h.request for h in completed])
+    for h, w in zip(completed, want):
+        _assert_results_equal(h.result(), w)
+
+    # under "hopeless" a bucket whose flush_at has passed is by definition
+    # already unmeetable, so its entries shed before due() ever returns it
+    # — deadline flushes never fire, only capacity/drain flushes do
+    assert all(o == [] for o in due1)
+    assert eng1.stats.flush_deadline == 0
+
+    # the same trace through a second engine on the same cache: identical
+    # policy decisions (all-virtual determinism) and zero new compiles
+    eng2, hs2, _ = run("r1")
+    assert cache.compiles == compiles, \
+        "second engine recompiled a shared executable"
+    assert eng2.stats.cache_misses == 0
+    assert (eng2.stats.rejected, eng2.stats.shed, eng2.stats.completed) == \
+        (s.rejected, s.shed, s.completed)
+    for a, b in zip(hs1, hs2):
+        assert type(a.exception()) is type(b.exception())
+
+    # under "never" deadline flushes DO fire, in slack order, and every
+    # admitted request completes (late but bit-identical)
+    eng3, hs3, due3 = run("r2", policy="never")
+    assert any(len(o) > 0 for o in due3), "never-policy run saw no deadline" \
+        " pressure — trace not oversubscribed enough"
+    for order in due3:
+        assert order == sorted(order), "deadline flushes out of slack order"
+    s3 = eng3.stats
+    assert s3.shed == 0 and s3.failures == 0 and s3.rejected > 0
+    assert s3.completed == s3.requests
+    done3 = [h for h in hs3 if h.exception() is None]
+    want3 = submit_many([h.request for h in done3])
+    for h, w in zip(done3, want3):
+        _assert_results_equal(h.result(), w)

@@ -195,6 +195,15 @@ _GRID_WORKER = textwrap.dedent("""
     except RuntimeError as e:
         assert "table_max_iter" in str(e)
 
+    # ... and symmetrically on the REPLICATED table (serve-v3 bugfix
+    # sweep): same refusal, cheapest layout to keep the compile small
+    try:
+        distributed_manifold(order, make_dpc_mesh((2,)), conn,
+                             table_max_iter=1)
+        raise SystemExit("replicated tiny table_max_iter did not raise")
+    except RuntimeError as e:
+        assert "table_max_iter" in str(e)
+
     print("SHARDED-GRID-OK")
 """).format(tests_dir=os.path.dirname(os.path.abspath(__file__)))
 
@@ -241,6 +250,14 @@ _GRAPH_WORKER = textwrap.dedent("""
         distributed_connected_components_graph(
             mask, dec, mesh, table_mode="sharded", table_max_iter=1)
         raise SystemExit("tiny table_max_iter did not raise")
+    except RuntimeError as e:
+        assert "table_max_iter" in str(e)
+
+    # symmetric replicated refusal (serve-v3 bugfix sweep)
+    try:
+        distributed_connected_components_graph(
+            mask, dec, mesh, table_max_iter=1)
+        raise SystemExit("replicated tiny table_max_iter did not raise")
     except RuntimeError as e:
         assert "table_max_iter" in str(e)
 
